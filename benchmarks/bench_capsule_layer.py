@@ -1,0 +1,64 @@
+"""Paper Tables 7 & 8 analogue: capsule-layer (dynamic routing) latency.
+
+The paper's geometries: MNIST 10x1024x6x4 (L), smallNORB 5x1600x6x4 (M),
+CIFAR-10 10x64x5x4 (S) — cap_q7 on STM32H755: 103.40 / 90.60 / 29.63 ms;
+GAP-8 octa-core: 46.83 / 38.03 / 11.28 ms.  Two rows per geometry:
+the paper-faithful unfused pipeline (Alg. 5's four support functions,
+u_hat through memory every iteration) and the beyond-paper FUSED Pallas
+routing kernel (u_hat resident, DESIGN §7) — derived = u_hat HBM
+round-trips eliminated.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import csv_row, time_call
+from repro.core import capsnet as C
+from repro.core.capsnet_q7 import QCapsNet, capsule_layer_q7
+from repro.kernels import ops as kops
+
+CASES = [("mnist_L", C.MNIST, 1024), ("smallnorb_M", C.SMALLNORB, 1600),
+         ("cifar10_S", C.CIFAR10, 64)]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for name, cfg, I in CASES:
+        J, O, D, R = cfg.num_classes, cfg.caps_dim, cfg.pcap_dim, \
+            cfg.routings
+        W = jnp.asarray(rng.integers(-128, 128, (J, I, O, D)), jnp.int8)
+        u = jnp.asarray(rng.integers(-128, 128, (1, I, D)), jnp.int8)
+        shifts = {"uhat_shift": 7, "logit_frac": 7}
+        for r in range(R):
+            shifts[f"caps_out_shift_{r}"] = 9
+            shifts[f"caps_out_frac_{r}"] = 7
+            if r < R - 1:
+                shifts[f"agree_shift_{r}"] = 8
+        model = QCapsNet(cfg=cfg, weights={"caps": {"W": W}}, shifts=shifts)
+
+        fn = jax.jit(lambda uu, m=model: capsule_layer_q7(m, uu))
+        us = time_call(fn, u)
+        macs = J * I * O * D + R * 2 * J * I * O
+        csv_row(f"cap_q7_unfused_{name}_{J}x{I}x{O}x{D}", us,
+                f"{macs/us:.0f}MAC/us")
+
+        # fused: u_hat precomputed once, routing fully in VMEM
+        from repro.quant import int8_ops as q
+        acc = jnp.einsum("jiod,bid->bjio", W.astype(jnp.int32),
+                         u.astype(jnp.int32))
+        u_hat = q.rshift_sat8(acc, 7)
+        kw = dict(num_iters=R,
+                  caps_out_shifts=tuple([9] * R),
+                  caps_out_fracs=tuple([7] * R),
+                  agree_shifts=tuple([8] * (R - 1)), logit_frac=7)
+        fn2 = lambda uh: kops.routing_q7(uh, **kw)
+        us2 = time_call(fn2, u_hat)
+        saved = (2 * R - 1) * J * I * O  # u_hat bytes no longer re-read
+        csv_row(f"cap_q7_fused_routing_{name}_{J}x{I}x{O}x{D}", us2,
+                f"{saved}B_hbm_saved")
+
+
+if __name__ == "__main__":
+    main()

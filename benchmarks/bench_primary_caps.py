@@ -1,0 +1,46 @@
+"""Paper Tables 5 & 6 analogue: primary-capsule layer latency.
+
+The paper's three kernels: MNIST 7x7x16x64 (M), smallNORB 7x7x32x64 (L),
+CIFAR-10 3x3x64x64 (S) — pcap_q7 on STM32H755 took 119.94 / 740.03 /
+21.87 ms; GAP-8 octa-core 7.02 / 55.32 / 1.30 ms.  Here: the full int8
+primary-capsule layer (conv + reshape + integer squash) at the paper's
+exact geometries.  derived = MAC/us over the conv.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import csv_row, time_call
+from repro.core import capsnet as C
+from repro.core.capsnet_q7 import QCapsNet, pcap_q7
+from repro.quant import qformat as qf
+
+CASES = [("mnist_M", C.MNIST), ("smallnorb_L", C.SMALLNORB),
+         ("cifar10_S", C.CIFAR10)]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for name, cfg in CASES:
+        h, w = cfg.conv_out_hw
+        cin = cfg.conv_filters[-1]
+        x = jnp.asarray(rng.integers(-128, 128, (1, h, w, cin)), jnp.int8)
+        k = cfg.pcap_kernel
+        pout = cfg.pcap_caps * cfg.pcap_dim
+        weights = {"pcap": {
+            "w": jnp.asarray(rng.integers(-128, 128, (k, k, cin, pout)),
+                             jnp.int8),
+            "b": jnp.asarray(rng.integers(-128, 128, (pout,)), jnp.int8)}}
+        shifts = {"pcap_out_shift": 9, "pcap_bias_shift": 2,
+                  "pcap_out_frac": 5}
+        model = QCapsNet(cfg=cfg, weights=weights, shifts=shifts)
+        fn = jax.jit(lambda xx, m=model: pcap_q7(m, xx))
+        us = time_call(fn, x)
+        ph, pw = cfg.pcap_out_hw
+        macs = ph * pw * pout * k * k * cin
+        csv_row(f"pcap_q7_{name}_{k}x{k}x{cin}x{pout}", us,
+                f"{macs/us:.0f}MAC/us")
+
+
+if __name__ == "__main__":
+    main()

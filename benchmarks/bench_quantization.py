@@ -1,0 +1,32 @@
+"""Paper Table 2 analogue: quantization framework — memory footprint and
+PTQ cost per CapsNet config (accuracy deltas are measured end-to-end in
+examples/train_capsnet.py, which trains first; this bench keeps the table
+fast by reporting footprint + calibration/quantization wall time).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import csv_row, time_call
+from repro.core import capsnet as C
+from repro.data.synthetic import make_image_dataset
+from repro.quant import ptq
+
+CASES = [("mnist", C.MNIST), ("smallnorb", C.SMALLNORB),
+         ("cifar10", C.CIFAR10)]
+
+
+def main():
+    for name, cfg in CASES:
+        params = C.init_capsnet(jax.random.key(0), cfg)
+        calib = jnp.asarray(make_image_dataset(name, 64, seed=1)[0])
+        qm = ptq.quantize_capsnet(params, cfg, calib)
+        rep = ptq.footprint_report(params, qm)
+        us = time_call(lambda: ptq.quantize_capsnet(params, cfg, calib),
+                       warmup=0, reps=3)
+        csv_row(f"ptq_{name}", us,
+                f"{rep['fp32_kb']:.1f}KB->{rep['int8_kb']:.1f}KB_"
+                f"save{rep['saving_pct']:.2f}pct")
+
+
+if __name__ == "__main__":
+    main()

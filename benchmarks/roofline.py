@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)).
+
+Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh):
+the three roofline terms (compute / memory / collective, seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+
+    PYTHONPATH=src python -m benchmarks.roofline            # table
+    PYTHONPATH=src python -m benchmarks.roofline --csv      # CSV
+    PYTHONPATH=src python -m benchmarks.roofline --mesh single --md
+"""
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path("artifacts/dryrun")
+
+
+def load(mesh: str | None = None, include_tagged: bool = False,
+         tag: str | None = None):
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if tag is not None:
+            if rec.get("tag") != tag or rec.get("quant"):
+                continue
+        elif not include_tagged and (rec.get("tag") or rec.get("quant")):
+            continue
+        rec["_file"] = f.name
+        rows.append(rec)
+    return rows
+
+
+def fmt_row(r):
+    t = r["terms"]
+    return (r["arch"], r["shape"], r["mesh"],
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}", r["dominant"].replace("_s", ""),
+            f"{r['useful_flop_ratio']:.3f}",
+            f"{r['roofline_fraction']:.4f}",
+            f"{r['hbm_gib_per_dev']:.2f}")
+
+
+HDR = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+       "dominant", "useful/HLO", "roofline_frac", "HBM_GiB/dev")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi"), default=None)
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--all-variants", action="store_true")
+    ap.add_argument("--tag", default=None,
+                    help="show only artifacts with this tag (e.g. opt)")
+    args = ap.parse_args()
+    rows = load(args.mesh, include_tagged=args.all_variants, tag=args.tag)
+    if args.csv:
+        print(",".join(HDR))
+        for r in rows:
+            print(",".join(fmt_row(r)))
+        return
+    sep = " | " if args.md else "  "
+    widths = [20, 12, 7, 10, 10, 12, 10, 10, 13, 11]
+    line = sep.join(h.ljust(w) for h, w in zip(HDR, widths))
+    print(("| " + line + " |") if args.md else line)
+    if args.md:
+        print("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for r in rows:
+        cells = sep.join(c.ljust(w) for c, w in zip(fmt_row(r), widths))
+        print(("| " + cells + " |") if args.md else cells)
+
+
+if __name__ == "__main__":
+    main()

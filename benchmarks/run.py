@@ -1,0 +1,58 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point:
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Sections (one per paper table):
+  Table 2  -> bench_quantization   (footprint / PTQ cost)
+  Tables 3/4 -> bench_matmul       (int8 matmul variants)
+  Tables 5/6 -> bench_primary_caps (primary capsule layer)
+  Tables 7/8 -> bench_capsule_layer(capsule layer / dynamic routing,
+                                    unfused vs fused-VMEM kernel)
+plus the roofline summary from the dry-run artifacts (if present).
+
+CPU wall-clock is the validation substrate (interpret-mode kernels); the
+derived column carries the hardware-independent figure.
+"""
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_capsule_layer, bench_matmul,
+                            bench_primary_caps, bench_quantization)
+    print("# --- Table 2: quantization framework ---")
+    bench_quantization.main()
+    print("# --- Tables 3/4: int8 matmul variants ---")
+    bench_matmul.main()
+    print("# --- Tables 5/6: primary capsule layer ---")
+    bench_primary_caps.main()
+    print("# --- Tables 7/8: capsule layer (dynamic routing) ---")
+    bench_capsule_layer.main()
+
+    import pathlib
+    if pathlib.Path("artifacts/dryrun").exists():
+        from benchmarks import roofline
+        opt = roofline.load("single", tag="opt")
+        rows = opt or roofline.load("single")
+        grid = "optimized (§Perf)" if opt else "baseline"
+        base = {(r["arch"], r["shape"]): r
+                for r in roofline.load("single")}
+        print(f"# --- Roofline summary: {grid} grid, single-pod "
+              "(full table: python -m benchmarks.roofline) ---")
+        for r in rows:
+            t = r["terms"]
+            bound = max(t.values())
+            b = base.get((r["arch"], r["shape"]))
+            speedup = ""
+            if b is not None and opt:
+                b_bound = max(b["terms"].values())
+                speedup = f"_speedup={b_bound/max(bound,1e-12):.1f}x"
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{bound*1e6:.0f},"
+                  f"dom={r['dominant'].replace('_s','')}"
+                  f"_frac={r['roofline_fraction']:.4f}{speedup}")
+
+
+if __name__ == "__main__":
+    main()

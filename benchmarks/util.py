@@ -1,0 +1,21 @@
+"""Benchmark timing helpers."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, reps: int = 10) -> float:
+    """Median wall time of fn(*args) in microseconds (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,2 @@
+from repro.ckpt.ckpt import (  # noqa: F401
+    latest_step, restore, restore_latest, save, gc_keep_n)

@@ -1,0 +1,38 @@
+"""Dynamic routing between capsules (Sabour et al. 2017, Algorithm 1) —
+float reference implementation.
+
+u_hat [B, J, I, O]: prediction of capsule j (layer L+1) from capsule i
+(layer L).  Coupling logits b start at zero; each iteration couples via a
+softmax over the *output* capsules j (the importances of capsule i for all
+j sum to 1), forms s_j = sum_i c_ij u_hat_ji, squashes, and reinforces b by
+the agreement <u_hat_ji, v_j>.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def squash(s, axis: int = -1, eps: float = 1e-7):
+    """v = (|s|^2 / (1+|s|^2)) * s/|s|  (Eq. 1), fp32 internals."""
+    s = s.astype(jnp.float32)
+    sq = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    return (sq / (1.0 + sq)) * s * jax.lax.rsqrt(sq + eps)
+
+
+def dynamic_routing(u_hat, num_iters: int = 3):
+    """u_hat [B, J, I, O] -> v [B, J, O] (and final coupling c [B, J, I])."""
+    B, J, I, O = u_hat.shape
+    b = jnp.zeros((B, J, I), jnp.float32)
+    u_f = u_hat.astype(jnp.float32)
+    # routing does not backprop through the coupling iterations' inputs in
+    # the original implementation except the last; we keep full backprop
+    # (matches the reference TF code behaviour with small r).
+    v = None
+    for r in range(num_iters):
+        c = jax.nn.softmax(b, axis=1)            # over output capsules j
+        s = jnp.einsum("bji,bjio->bjo", c, u_f)
+        v = squash(s, axis=-1)
+        if r < num_iters - 1:
+            b = b + jnp.einsum("bjio,bjo->bji", u_f, v)
+    return v.astype(u_hat.dtype), None

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) cell:
+  with mesh:
+      lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(**input_specs)
+      compiled = lowered.compile()
+      print(compiled.memory_analysis())   # proves it fits
+      print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+plus collective-byte parsing of the compiled HLO.  Results land as JSON in
+artifacts/dryrun/<arch>__<shape>__<mesh>.json (resumable: existing artifacts
+are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full grid
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_cell
+
+DEFAULT_OUT = pathlib.Path("artifacts/dryrun")
+
+
+def donate_for(kind: str):
+    if kind == "train":
+        return (0,)       # state
+    if kind == "decode":
+        return (1,)       # cache
+    return ()
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             outdir: pathlib.Path, force: bool = False,
+             arch_override=None, quant: bool = False,
+             tag: str = "") -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    suffix = ("__w8a8" if quant else "") + (f"__{tag}" if tag else "")
+    path = outdir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        print(f"[skip-existing] {path.name}: {rec.get('status')}")
+        return rec
+
+    cfg = arch_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "quant": quant, "tag": tag, "status": "?"}
+    if quant and shape.kind == "train":
+        record.update(status="skipped",
+                      reason="W8A8 is a serving path (PTQ after training)")
+        path.write_text(json.dumps(record, indent=1))
+        return record
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        path.write_text(json.dumps(record, indent=1))
+        print(f"[skipped ] {arch} x {shape_name} x {mesh_kind}: {why}")
+        return record
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        with mesh:
+            fn, args, in_sh, out_sh = steps.make_cell(cfg, shape, mesh,
+                                                      quant=quant)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate_for(shape.kind))
+            t0 = time.time()
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+            record.update(analyze_cell(compiled, cfg, shape, mesh,
+                                       mesh_kind, int8=quant))
+            record.update(status="ok", lower_s=round(t1 - t0, 2),
+                          compile_s=round(t2 - t1, 2))
+            del compiled, lowered, jitted
+    except Exception as e:  # a failing cell is a bug: record it loudly
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[ERROR   ] {arch} x {shape_name} x {mesh_kind}: {e}")
+    path.write_text(json.dumps(record, indent=1, default=str))
+    t = record.get("terms", {})
+    if record["status"] == "ok":
+        print(f"[ok {record['compile_s']:7.1f}s] {arch} x {shape_name} x "
+              f"{mesh_kind}: dominant={record['dominant']} "
+              f"frac={record['roofline_fraction']:.3f} "
+              f"hbm={record['hbm_gib_per_dev']:.2f}GiB "
+              f"terms={{c:{t['compute_s']:.4f},m:{t['memory_s']:.4f},"
+              f"n:{t['collective_s']:.4f}}}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="W8A8 parameter tree (prefill/decode cells)")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for perf-iteration variants")
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8 KV cache (decode cells)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = list(SHAPES) if (args.all or not args.shape) else (args.shape,)
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                override = None
+                if args.kv8:
+                    override = get_config(arch).scaled(kv_cache_int8=True)
+                rec = run_cell(arch, shape, mesh_kind, outdir, args.force,
+                               quant=args.quant, tag=args.tag,
+                               arch_override=override)
+                n_err += rec.get("status") == "error"
+    print(f"done; {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

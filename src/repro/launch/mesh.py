@@ -1,0 +1,50 @@
+"""Production mesh builders.
+
+Single pod = one v5e 16x16 pod (256 chips), axes (data, model).
+Multi-pod  = 2 pods = 512 chips, axes (pod, data, model).
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run process
+forces 512 host devices; the single-pod mesh then uses the first 256, which
+is why construction goes through an explicit device array rather than
+`jax.make_mesh` (which insists on consuming every device).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(axes=("pod", "data", "model")) -> Mesh:
+    """A mesh over whatever devices exist (tests / local runs).
+
+    Greedily factors the device count over the requested axes, model last.
+    """
+    devs = jax.devices()
+    n = len(devs)
+    shape = [1] * len(axes)
+    shape[-1] = n
+    return Mesh(np.asarray(devs).reshape(shape), axes)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

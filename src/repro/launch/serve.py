@@ -1,0 +1,98 @@
+"""Batched serving driver: prefill + decode loop with optional W8A8
+quantization (the paper's technique as a first-class serving feature).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --reduce \
+      --requests 8 --prompt-len 64 --gen 32 --quant w8a8
+
+Requests are batched (continuous batching at fixed positions: all rows in
+a wave share a decode position — the production scheduler would interleave
+waves), the KV cache is allocated once per wave, and --quant w8a8 swaps
+the parameter tree for int8 weights with per-channel power-of-two scales
+(repro.quant.lm_quant) — on TPU that halves weight HBM traffic and runs
+the matmuls on the MXU's 2x-rate int8 path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.data.synthetic import TokenTask
+from repro.launch.train import reduced
+from repro.models.transformer import build_model, decode_alloc
+from repro.quant.lm_quant import quantize_lm_params, quantized_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm_3b")
+    ap.add_argument("--reduce", action="store_true", default=True)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--quant", choices=("none", "w8a8"), default="none")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg, d_model=args.d_model)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    fp_bytes = sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(params))
+    if args.quant == "w8a8":
+        params = quantize_lm_params(params)
+        print(f"[quant] params {fp_bytes/2**20:.1f} MiB -> "
+              f"{quantized_bytes(params)/2**20:.1f} MiB int8")
+
+    task = TokenTask(cfg.vocab_size, args.prompt_len, seed=3)
+    prompts = jnp.asarray(task.batch(0, args.requests)["inputs"])
+    alloc = decode_alloc(args.prompt_len + args.gen)
+
+    batch = {"inputs": prompts}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.zeros(
+            (args.requests, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.zeros(
+            (args.requests, args.prompt_len, cfg.d_model), jnp.float32)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, alloc=alloc))
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    pos0 = args.prompt_len + (cfg.num_prefix_embeds
+                              if cfg.family == "vlm" else 0)
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(pos0 + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, 1)
+    tps = args.requests * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {t_prefill*1e3:.1f} ms for "
+          f"{args.requests}x{args.prompt_len} tokens")
+    print(f"decode : {t_decode*1e3:.1f} ms for {args.gen-1} steps "
+          f"({tps:.1f} tok/s aggregate)")
+    print(f"sample completions (first 2 rows, first 12 tokens):")
+    for r in range(min(2, args.requests)):
+        print(f"  req{r}: {gen[r, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

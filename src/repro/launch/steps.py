@@ -1,0 +1,224 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture x input-shape) cell.
+
+`input_specs(cfg, shape)` returns the stand-in structs for every model input
+(the shannon/kernels pattern: weak-type-correct, shardable, no allocation);
+`make_cell(cfg, shape, mesh)` additionally returns the step callable and
+in/out shardings so the dry-run is a single jit().lower().compile().
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist import sharding as shd
+from repro.dist.api import BATCH
+from repro.models.transformer import build_model, decode_alloc
+from repro.optim.adam import AdamW, cosine_schedule
+
+
+def structs(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# batch structs per shape kind
+# ---------------------------------------------------------------------------
+def batch_structs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            Pn = cfg.num_prefix_embeds
+            b = {"inputs": tok((B, S - Pn)),
+                 "prefix_embeds": emb((B, Pn, cfg.d_model))}
+            if shape.kind == "train":
+                b["targets"] = tok((B, S - Pn))
+            return b
+        if cfg.is_encoder_decoder:
+            b = {"frames": emb((B, S, cfg.d_model)), "inputs": tok((B, S))}
+            if shape.kind == "train":
+                b["targets"] = tok((B, S))
+            return b
+        b = {"inputs": tok((B, S))}
+        if shape.kind == "train":
+            b["targets"] = tok((B, S))
+        return b
+    # decode: one new token against a seq_len cache
+    return {"token": tok((B, 1))}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                quant: bool = False) -> dict:
+    """All inputs of the lowered step for this cell, as ShapeDtypeStructs.
+    quant=True swaps the parameter tree for its W8A8 form (serving only)."""
+    model = build_model(cfg)
+
+    def params_struct():
+        def mk():
+            p = model.init(jax.random.key(0))
+            if quant:
+                from repro.quant.lm_quant import quantize_lm_params
+                p = quantize_lm_params(p)
+            return p
+        return structs(jax.eval_shape(mk))
+
+    out = {"batch": batch_structs(cfg, shape)}
+    if shape.kind == "train":
+        out["state"] = train_state_structs(cfg)
+    elif shape.kind == "prefill":
+        out["params"] = params_struct()
+    else:
+        out["params"] = params_struct()
+        out["cache"] = cache_structs(cfg, shape)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def cache_is_stacked(cfg: ModelConfig) -> bool:
+    return cfg.is_encoder_decoder or not cfg.decode_unroll
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeSpec):
+    model = build_model(cfg)
+    B = shape.global_batch
+    alloc = decode_alloc(shape.seq_len)
+    if cfg.is_encoder_decoder:
+        fn = lambda: model.init_cache(B, alloc, src_len=shape.seq_len)
+    else:
+        fn = lambda: model.init_cache(B, alloc,
+                                      stacked=not cfg.decode_unroll)
+    return structs(jax.eval_shape(fn))
+
+
+# ---------------------------------------------------------------------------
+# train state
+# ---------------------------------------------------------------------------
+def make_optimizer(total_steps: int = 100_000) -> AdamW:
+    return AdamW(lr=cosine_schedule(3e-4, 2000, total_steps),
+                 weight_decay=0.1, clip_norm=1.0)
+
+
+def train_state_structs(cfg: ModelConfig) -> dict:
+    model = build_model(cfg)
+    opt = make_optimizer()
+
+    def init():
+        p = model.init(jax.random.key(0))
+        return {"params": p, "opt": opt.init(p),
+                "step": jnp.zeros((), jnp.int32)}
+    return structs(jax.eval_shape(init))
+
+
+def init_train_state(cfg: ModelConfig, key) -> dict:
+    model = build_model(cfg)
+    opt = make_optimizer()
+    p = model.init(key)
+    return {"params": p, "opt": opt.init(p),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig):
+    model = build_model(cfg)
+    opt = make_optimizer()
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return model.train_loss(params, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, **opt_metrics)
+        return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly: (step fn, input structs, in/out shardings)
+# ---------------------------------------------------------------------------
+def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, quant: bool = False):
+    """Returns (fn, args tuple of structs, in_shardings, out_shardings)."""
+    from repro.dist.api import dp_size
+    B = shape.global_batch
+    specs = input_specs(cfg, shape, quant=quant)
+    bspec = shd.batch_specs(specs["batch"], B, mesh)
+    logits_spec = P(BATCH, None) if B % dp_size(mesh) == 0 else P()
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg)
+        st = specs["state"]
+        st_spec = {
+            "params": shd.param_specs(st["params"]),
+            "opt": shd.opt_state_specs(st["opt"], st["params"]),
+            "step": P(),
+        }
+        args = (st, specs["batch"])
+        in_specs = (st_spec, bspec)
+        out_specs = (st_spec, P())          # metrics replicated
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, shape)
+        p_spec = shd.param_specs(specs["params"])
+        cache_out = shd.cache_specs(
+            _prefill_cache_structs(cfg, shape), B, mesh,
+            stacked=cache_is_stacked(cfg))
+        args = (specs["params"], specs["batch"])
+        in_specs = (p_spec, bspec)
+        out_specs = (logits_spec, cache_out)
+    else:
+        fn = make_decode_step(cfg)
+        p_spec = shd.param_specs(specs["params"])
+        c_spec = shd.cache_specs(specs["cache"], B, mesh,
+                                 stacked=cache_is_stacked(cfg))
+        args = (specs["params"], specs["cache"], specs["batch"]["token"],
+                specs["pos"])
+        tok_spec = shd.batch_specs(specs["batch"], B, mesh)["token"]
+        in_specs = (p_spec, c_spec, tok_spec, P())
+        out_specs = (logits_spec, c_spec)
+
+    in_shardings = jax.tree.map(
+        lambda s: shd.to_shardings(s, mesh),
+        in_specs, is_leaf=lambda x: isinstance(x, P))
+    out_shardings = jax.tree.map(
+        lambda s: shd.to_shardings(s, mesh),
+        out_specs, is_leaf=lambda x: isinstance(x, P))
+    return fn, args, in_shardings, out_shardings
+
+
+def _prefill_cache_structs(cfg, shape):
+    """Prefill OUTPUT cache layout (unstacked when decode_unroll, since
+    prefill hands its cache to the unrolled decode step)."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        fn = lambda: model.init_cache(B, S, src_len=S)
+    else:
+        fn = lambda: model.init_cache(B, S, stacked=not cfg.decode_unroll)
+    return structs(jax.eval_shape(fn))

@@ -1,0 +1,438 @@
+"""Attention: chunked online-softmax (flash-style) prefill/train path,
+cached decode path, GQA/MQA, sliding windows (ring-buffer cache), qk-norm,
+prefix-LM masking.
+
+The train/prefill path is pure JAX (scan over q-chunks x kv-chunks with
+running max/denominator) so that (a) activation memory stays O(S * chunk)
+instead of O(S^2) and (b) XLA cost_analysis sees every FLOP (Pallas
+custom-calls would hide them from the roofline; see DESIGN.md §6).
+
+Sliding-window layers slice a static [q_chunk + window] KV strip per q-chunk
+(honest O(S*(window+chunk)) FLOPs).  Global causal layers compute the full
+masked rectangle: HLO_FLOPs ~ 2x the causal ideal, which is deliberately
+visible in the MODEL_FLOPS/HLO_FLOPs roofline ratio (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH, shard
+from repro.models import layers
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attn(key, cfg) -> dict:
+    d = cfg.d_model
+    h_eff = cfg.num_heads + cfg.head_pad
+    qdim = h_eff * cfg.head_dim
+    kdim = cfg.num_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    wq = jax.random.normal(ks[0], (d, qdim), jnp.float32) * s
+    if cfg.head_pad:  # zero the padded query heads (function-preserving)
+        wq = wq.at[:, cfg.num_heads * cfg.head_dim:].set(0.0)
+    p = {
+        "wq": wq.astype(layers.DEFAULT_DTYPE),
+        "wk": (jax.random.normal(ks[1], (d, kdim), jnp.float32) * s).astype(layers.DEFAULT_DTYPE),
+        "wv": (jax.random.normal(ks[2], (d, kdim), jnp.float32) * s).astype(layers.DEFAULT_DTYPE),
+        "wo": _zero_pad_rows(
+            jax.random.normal(ks[3], (qdim, d), jnp.float32)
+            * (qdim ** -0.5), cfg).astype(layers.DEFAULT_DTYPE),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qdim,), layers.DEFAULT_DTYPE)
+        p["bk"] = jnp.zeros((kdim,), layers.DEFAULT_DTYPE)
+        p["bv"] = jnp.zeros((kdim,), layers.DEFAULT_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _zero_pad_rows(wo, cfg):
+    if cfg.head_pad:
+        wo = wo.at[cfg.num_heads * cfg.head_dim:].set(0.0)
+    return wo
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """[B, S, K, Dh] -> [B, S, K*groups, Dh] (GQA -> MHA expansion)."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=2)
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (n assumed power-of-2-ish)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, window=0, prefix_len=0,
+                    q_chunk=512, kv_chunk=1024):
+    """q [B,Sq,H,Dh]; k,v [B,Sk,K,Dh].  Positions are array indices.
+
+    Returns [B,Sq,H,Dh] in q.dtype, with fp32 softmax accumulation.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = Dh ** -0.5
+    qc = _pick_chunk(Sq, q_chunk)
+    nq = Sq // qc
+
+    qb = q.reshape(B, nq, qc, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    if window > 0:
+        # static KV strip per q-chunk: [window + qc]
+        strip = window + qc
+        pad = max(strip - Sk, 0)
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def q_body(_, xs):
+            q_blk, qi = xs
+            q0 = qi * qc
+            start = jnp.clip(q0 - window + pad, 0, Sk + pad - strip)
+            ks_ = jax.lax.dynamic_slice_in_dim(kp, start, strip, axis=1)
+            vs_ = jax.lax.dynamic_slice_in_dim(vp, start, strip, axis=1)
+            # padded index i holds position i - pad
+            kv_pos = start - pad + jnp.arange(strip)
+            q_pos = q0 + jnp.arange(qc)
+            o = _attend_block(q_blk, ks_, vs_, q_pos, kv_pos, causal, window,
+                              prefix_len, G, scale, kv_chunk)
+            return None, o
+
+        _, ob = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))
+    else:
+        def q_body(_, xs):
+            q_blk, qi = xs
+            q_pos = qi * qc + jnp.arange(qc)
+            kv_pos = jnp.arange(Sk)
+            o = _attend_block(q_blk, k, v, q_pos, kv_pos, causal, 0,
+                              prefix_len, G, scale, kv_chunk)
+            return None, o
+
+        _, ob = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))
+
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+def _attend_block(q_blk, k, v, q_pos, kv_pos, causal, window, prefix_len,
+                  G, scale, kv_chunk):
+    """One q-chunk against a KV strip, inner scan over KV chunks.
+
+    q_blk [B,qc,H,Dh]; k,v [B,Skv,K,Dh]; q_pos [qc]; kv_pos [Skv].
+    """
+    B, qc, H, Dh = q_blk.shape
+    Skv = k.shape[1]
+    kc = _pick_chunk(Skv, kv_chunk)
+    nk = Skv // kc
+    kb = k.reshape(B, nk, kc, -1, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kc, -1, Dh).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nk, kc)
+    qf = q_blk.astype(jnp.float32) * scale
+
+    K = H // G
+    qg = qf.reshape(B, qc, K, G, Dh)
+
+    def kv_body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, kp = xs                       # [B,kc,K,Dh]
+        # grouped-query einsum: the G-fold KV repeat is implicit
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(q_blk.dtype), k_blk,
+                       preferred_element_type=jnp.float32)
+        mask = _mask(q_pos[:, None], kp[None, :], causal, window, prefix_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+    a0 = jnp.zeros((B, K, G, qc, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # [B,K,G,qc,Dh]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, Dh)
+    return out.astype(q_blk.dtype)
+
+
+def _mask(qp, kp, causal, window, prefix_len):
+    ok = (kp <= qp) if causal else (kp >= 0)
+    if window > 0:
+        ok &= kp > qp - window
+    if prefix_len > 0:
+        ok |= (kp < prefix_len) & (qp < prefix_len)
+    ok &= kp >= 0
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (paper's Qm.n format on the cache; §Perf C5)
+# ---------------------------------------------------------------------------
+def quantize_kv(x):
+    """x [B,S,K,Dh] -> (int8 values, int8 exponents [B,S,K]).
+    Per-(position, head) power-of-two scales: q = round(x * 2^e)."""
+    xf = x.astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(xf), axis=-1)
+    e = jnp.clip(jnp.floor(jnp.log2(127.0 / jnp.maximum(max_abs, 1e-30))),
+                 -24, 24)
+    q = jnp.clip(jnp.round(xf * jnp.exp2(e)[..., None]), -128, 127)
+    return q.astype(jnp.int8), e.astype(jnp.int8)
+
+
+def _int8_cached_attention(q, cache, kv_pos, q_pos, ax):
+    """Decode attention on the int8 cache.
+
+    QK^T runs as a pure int8 x int8 -> int32 einsum (the MXU's 2x-rate
+    path; the paper's matmul_q7 pattern with dynamic instead of static
+    exponents) descaled by the pow2 exponents.  The PV product folds the
+    per-position v exponents into the probabilities (they cannot factor
+    out of an integer accumulation), so v is dequantized in-register —
+    v still LIVES in HBM as int8 (half the cache bytes).
+    """
+    B, Q, H, Dh = q.shape
+    K = cache["k"].shape[2]
+    G = H // K
+    kq, ke = cache["k"], cache["k_e"]
+    vq, ve = cache["v"], cache["v_e"]
+    if ax is not None:
+        b, seq = ax
+        q = shard(q, b, None, None, None)
+        kq = shard(kq, b, seq, None, None)
+        vq = shard(vq, b, seq, None, None)
+    qq, qe = quantize_kv(q)                        # [B,Q,H,Dh], [B,Q,H]
+    qg = qq.reshape(B, Q, K, G, Dh)
+    acc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kq,
+                     preferred_element_type=jnp.int32)
+    scale = Dh ** -0.5
+    qe_g = qe.reshape(B, Q, K, G).transpose(0, 2, 3, 1)      # [B,K,G,Q]
+    de = jnp.exp2(-(qe_g[..., None].astype(jnp.float32)
+                    + ke.transpose(0, 2, 1)[:, :, None, None, :]
+                    .astype(jnp.float32)))
+    s = acc.astype(jnp.float32) * de * scale
+    ok = (kv_pos <= q_pos) & (kv_pos >= 0)
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    if ax is not None:
+        s = shard(s, ax[0], None, None, None, ax[1])
+    p = jax.nn.softmax(s, axis=-1)
+    pw = p * jnp.exp2(-ve.transpose(0, 2, 1)[:, :, None, None, :]
+                      .astype(jnp.float32))
+    o = jnp.einsum("bkgqs,bskd->bkgqd", pw.astype(jnp.bfloat16),
+                   vq.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    if ax is not None:
+        o = shard(o, ax[0], None, None, None, None)
+    return o.reshape(B, K, G, Q, Dh).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, Q, H, Dh).astype(jnp.bfloat16)
+
+
+def _decode_seq_axes(batch: int):
+    """Cache sharding layout at decode (must mirror sharding.cache_specs):
+    batch over DP + seq over 'model' when the batch shards; otherwise seq
+    over ('data','model').  Returns (batch_axes, seq_axes) or None."""
+    from repro.dist.api import current_mesh, dp_size
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    shardable = batch % dp_size(mesh) == 0 and batch >= dp_size(mesh)
+    if shardable:
+        return BATCH, "model"
+    return None, ("data", "model")
+
+
+def cached_attention(q, k_cache, v_cache, kv_pos, q_pos, groups):
+    """q [B,1,H,Dh]; caches [B,S,K,Dh]; kv_pos [S] (position per slot, may be
+    invalid/negative); q_pos scalar.  fp32 softmax over the whole cache.
+
+    Sharding: sequence-sharded attention.  The cache stays sharded on its
+    seq dim; q is replicated over 'model'; every chip computes all heads
+    over its seq shard and the softmax/output reductions psum over the seq
+    axes.  Without these constraints GSPMD head-shards the scores and
+    ALL-GATHERS the whole KV cache over 'model' per layer (measured:
+    18.5 GB/dev/layer on gemma3 decode_32k — EXPERIMENTS.md §Perf C1).
+    """
+    B, Q, H, Dh = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    ax = _decode_seq_axes(B)
+    if ax is not None:
+        b, seq = ax
+        q = shard(q, b, None, None, None)
+        k_cache = shard(k_cache, b, seq, None, None)
+        v_cache = shard(v_cache, b, seq, None, None)
+    scale = Dh ** -0.5
+    # grouped-query einsum: never materialize the G-fold repeated cache
+    # (an explicit repeat costs G x cache bytes: 8x for qwen2 — §Perf C2)
+    qg = (q * scale).reshape(B, Q, K, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    ok = (kv_pos <= q_pos) & (kv_pos >= 0)
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    if ax is not None:
+        s = shard(s, ax[0], None, None, None, ax[1])
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    if ax is not None:
+        o = shard(o, ax[0], None, None, None, None)
+    return o.reshape(B, Q, H, Dh).astype(q.dtype)
+
+
+def ring_positions(q_pos, alloc: int):
+    """Position stored in each ring slot i after writes up to q_pos:
+    largest p <= q_pos with p % alloc == i (negative -> never written)."""
+    i = jnp.arange(alloc)
+    return q_pos - ((q_pos - i) % alloc)
+
+
+# ---------------------------------------------------------------------------
+# full attention mixer (projections + rope + dispatch by mode)
+# ---------------------------------------------------------------------------
+def attn_apply(cfg, params, x, *, mode: str, cache=None, pos=None,
+               prefix_len: int = 0, window: int = 0,
+               kv_override=None, is_cross: bool = False):
+    """x [B,S,D].  mode: train | prefill | decode.
+    cache: {"k","v"} [B,S_alloc,K,Dh] for prefill(out)/decode(in+out).
+    kv_override: encoder hidden states [B,Skv,D] for cross-attention at
+    train/prefill (decode cross reads the cache only, is_cross=True).
+    Returns (out [B,S,D], new_cache).
+    """
+    is_cross = is_cross or (kv_override is not None)
+    B, S, D = x.shape
+    H = cfg.num_heads + cfg.head_pad
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+
+    q = layers.dense(x, params["wq"], params.get("bq")).reshape(B, S, H, Dh)
+    if kv_override is not None:
+        x_kv = kv_override
+        Skv = x_kv.shape[1]
+        k = layers.dense(x_kv, params["wk"], params.get("bk")).reshape(B, Skv, K, Dh)
+        v = layers.dense(x_kv, params["wv"], params.get("bv")).reshape(B, Skv, K, Dh)
+    elif is_cross and mode == "decode":
+        k = v = None  # encoder K/V already live in the cache
+    else:
+        k = layers.dense(x, params["wk"], params.get("bk")).reshape(B, S, K, Dh)
+        v = layers.dense(x, params["wv"], params.get("bv")).reshape(B, S, K, Dh)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        if k is not None:
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    use_rope = cfg.rope_theta > 0 and not is_cross
+    if mode in ("train", "prefill"):
+        if use_rope:
+            positions = jnp.arange(S)[None, :]
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        q = shard(q, BATCH, None, "model", None)
+        k = shard(k, BATCH, None, None, None)
+        v = shard(v, BATCH, None, None, None)
+        causal = kv_override is None
+        # NOTE (§Perf D1, refuted): wrapping this call in jax.checkpoint
+        # (flash-style bwd recompute instead of scan-grad p-saves) traded
+        # the saved-tensor traffic for an equal recompute-read traffic at
+        # these shapes (qwen2 train: 67.9s -> 72.1s memory term), so the
+        # scan-grad saves are kept.
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            prefix_len=prefix_len)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = _fill_cache(cache, k, v, window)
+        out = layers.dense(o.reshape(B, S, H * Dh), params["wo"])
+        return out, new_cache
+
+    # ---- decode: S == 1 -------------------------------------------------
+    assert mode == "decode"
+    if use_rope:
+        positions = jnp.full((B, 1), pos)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if is_cross:
+        # cross-attention at decode reads the (static) encoder cache
+        kv_pos_arr = jnp.arange(cache["k"].shape[1])
+        o = cached_attention(q, cache["k"], cache["v"], kv_pos_arr,
+                             jnp.asarray(2**30), G)
+        out = layers.dense(o.reshape(B, 1, H * Dh), params["wo"])
+        return out, cache
+    alloc = cache["k"].shape[1]
+    if window > 0 and alloc <= window:
+        slot = pos % alloc
+        kv_pos_arr = ring_positions(pos, alloc)
+    else:
+        slot = pos
+        kv_pos_arr = jnp.arange(alloc)
+        if window > 0:  # full cache but windowed layer: mask stale slots
+            kv_pos_arr = jnp.where(kv_pos_arr > pos - window, kv_pos_arr, -1)
+    dus = lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(
+        buf, upd, slot, axis=1)
+    if cfg.kv_cache_int8:
+        kq, ke = quantize_kv(k)
+        vq, ve = quantize_kv(v)
+        new_cache = {"k": dus(cache["k"], kq), "k_e": dus(cache["k_e"], ke),
+                     "v": dus(cache["v"], vq), "v_e": dus(cache["v_e"], ve)}
+        o = _int8_cached_attention(q, new_cache, kv_pos_arr, pos,
+                                   _decode_seq_axes(B))
+    else:
+        new_cache = {"k": dus(cache["k"], k), "v": dus(cache["v"], v)}
+        o = cached_attention(q, new_cache["k"], new_cache["v"], kv_pos_arr,
+                             pos, G)
+    out = layers.dense(o.reshape(B, 1, H * Dh), params["wo"])
+    return out, new_cache
+
+
+def _fill_cache(cache, k, v, window: int):
+    """Write prefill K/V into an allocated cache (ring layout for SWA;
+    int8 caches quantize on write)."""
+    alloc = cache["k"].shape[1]
+    S = k.shape[1]
+    int8 = "k_e" in cache
+    parts = {}
+    if int8:
+        parts["k"], parts["k_e"] = quantize_kv(k)
+        parts["v"], parts["v_e"] = quantize_kv(v)
+    else:
+        parts["k"], parts["v"] = k, v
+    out = {}
+    for name, val in parts.items():
+        if window > 0 and alloc <= window:
+            take = min(S, alloc)
+            last = val[:, -take:]
+            # ring invariant: position p lives in slot p % alloc
+            shift = (S - take) % alloc if take < alloc else S % alloc
+            last = jnp.roll(last, shift, axis=1)
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], last, 0, axis=1)
+        else:
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val, 0, axis=1)
+    return out
+
+
+def init_attn_cache(cfg, batch: int, alloc: int, dtype=jnp.bfloat16) -> dict:
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    if getattr(cfg, "kv_cache_int8", False):
+        return {"k": jnp.zeros((batch, alloc, K, Dh), jnp.int8),
+                "k_e": jnp.zeros((batch, alloc, K), jnp.int8),
+                "v": jnp.zeros((batch, alloc, K, Dh), jnp.int8),
+                "v_e": jnp.zeros((batch, alloc, K), jnp.int8)}
+    return {"k": jnp.zeros((batch, alloc, K, Dh), dtype),
+            "v": jnp.zeros((batch, alloc, K, Dh), dtype)}

@@ -1,0 +1,132 @@
+"""Core layer primitives: norms, RoPE, dense projections, embeddings.
+
+All parameters are plain dicts of jnp arrays; every init function has a
+matching structure so `jax.eval_shape` can derive ShapeDtypeStruct trees for
+the dry-run without allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH, SEQ, shard
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_norm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def dense(x: jax.Array, w, b: jax.Array | None = None) -> jax.Array:
+    """Dense projection; dispatches to the W8A8 path when `w` is a
+    quantized leaf {"q","n"} (repro.quant.lm_quant)."""
+    if isinstance(w, dict) and "q" in w:
+        from repro.quant.lm_quant import q_dense
+        y = q_dense(x, w, out_dtype=x.dtype)
+    else:
+        y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=DEFAULT_DTYPE, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions [...,] int -> (sin, cos) [..., head_dim/2] fp32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, N, Dh], positions [B, S] (or [S]) -> rotated x (same dtype)."""
+    sin, cos = rope_angles(positions, x.shape[-1], theta)
+    # broadcast over the head axis
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, dtype=DEFAULT_DTYPE) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * (d ** -0.5)).astype(dtype)}
+
+
+def embed_lookup(params: dict, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return shard(out, BATCH, None, None)
+
+
+def init_lm_head(key, d: int, vocab: int, dtype=DEFAULT_DTYPE) -> dict:
+    return {"w": (jax.random.normal(key, (d, vocab), jnp.float32)
+                  * (d ** -0.5)).astype(dtype)}
+
+
+def lm_logits(params: dict, x: jax.Array) -> jax.Array:
+    return dense(x, params["w"])
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, f: int, dtype=DEFAULT_DTYPE) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f), jnp.float32) * s_in).astype(dtype),
+        "w_up":   (jax.random.normal(k2, (d, f), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    g = dense(x, params["w_gate"])
+    u = dense(x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, BATCH, None, "model")
+    return dense(h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Mean cross entropy; logits [..., V] (fp32 accum), labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,123 @@
+"""Mamba (selective SSM, Mamba-1) mixer.
+
+Projections/conv run in parallel over the sequence (MXU-visible matmuls);
+the recurrence runs as a chunked time scan (`scan_utils.chunked_scan`) with
+an O(B * ED * N) carry, giving honest FLOP accounting under cost_analysis
+(while-body cost x trip count) and bounded remat memory.
+
+Decode is a single-step state update: O(1) in sequence length, which is why
+jamba/xlstm run the long_500k cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH, shard
+from repro.models import layers
+from repro.models.scan_utils import chunked_scan, pick_chunk
+
+
+def init_mamba(key, cfg) -> dict:
+    d, ed = cfg.d_model, cfg.ssm_inner
+    n, r, kc = cfg.ssm_state_dim, cfg.dt_rank, cfg.ssm_conv_dim
+    ks = jax.random.split(key, 6)
+    dt = layers.DEFAULT_DTYPE
+    s = d ** -0.5
+    return {
+        "in_proj":  (jax.random.normal(ks[0], (d, 2 * ed), jnp.float32) * s).astype(dt),
+        "conv_w":   (jax.random.normal(ks[1], (kc, ed), jnp.float32) * 0.2).astype(dt),
+        "conv_b":   jnp.zeros((ed,), dt),
+        "x_proj":   (jax.random.normal(ks[2], (ed, r + 2 * n), jnp.float32) * ed ** -0.5).astype(dt),
+        "dt_proj":  (jax.random.normal(ks[3], (r, ed), jnp.float32) * r ** -0.5).astype(dt),
+        "dt_bias":  jnp.zeros((ed,), jnp.float32),
+        "A_log":    jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (ed, 1))),
+        "D":        jnp.ones((ed,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (ed, d), jnp.float32) * ed ** -0.5).astype(dt),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u [B,S,ED]; w [K,ED] depthwise causal conv.  state [B,K-1,ED] holds the
+    last K-1 inputs from the previous segment (or zeros)."""
+    K = w.shape[0]
+    B, S, ED = u.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, ED), u.dtype)
+    up = jnp.concatenate([state, u], axis=1)          # [B, S+K-1, ED]
+    y = jnp.zeros((B, S, ED), jnp.float32)
+    for j in range(K):
+        y = y + up[:, j:j + S].astype(jnp.float32) * w[j].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = up[:, -(K - 1):]
+    return jax.nn.silu(y).astype(u.dtype), new_state
+
+
+def _ssm_scan(u, dt, Bt, Ct, A, h0, chunk):
+    """u,dt [B,S,ED]; Bt,Ct [B,S,N]; A [ED,N]; h0 [B,ED,N] fp32.
+    Returns y [B,S,ED] fp32, hT."""
+    def body(h, xs):
+        u_t, dt_t, b_t, c_t = xs            # [B,ED],[B,ED],[B,N],[B,N]
+        dA = jnp.exp(dt_t[..., None] * A[None])            # [B,ED,N]
+        dBu = (dt_t * u_t)[..., None] * b_t[:, None, :]    # [B,ED,N]
+        h = dA * h + dBu
+        y_t = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y_t
+
+    xs = (u.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1),
+          Bt.swapaxes(0, 1).astype(jnp.float32),
+          Ct.swapaxes(0, 1).astype(jnp.float32))
+    hT, ys = chunked_scan(body, h0, xs, chunk=chunk)
+    return ys.swapaxes(0, 1), hT
+
+
+def mamba_apply(params, x, cfg, *, mode: str, cache=None):
+    """x [B,S,D] -> (y [B,S,D], new_cache).  cache {"conv","ssm"}."""
+    B, S, D = x.shape
+    ed, n, r = cfg.ssm_inner, cfg.ssm_state_dim, cfg.dt_rank
+
+    xz = layers.dense(x, params["in_proj"])
+    xz = shard(xz, BATCH, None, "model")
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                               conv_state)
+
+    bcr = layers.dense(u, params["x_proj"])               # [B,S,r+2n]
+    dt_r, Bt, Ct = jnp.split(bcr, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        layers.dense(dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                         # [ED,N]
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, ed, n), jnp.float32))
+
+    if mode == "decode":                                   # S == 1
+        def body(h, _):
+            dA = jnp.exp(dt[:, 0][..., None] * A[None])
+            dBu = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+                * Bt[:, 0].astype(jnp.float32)[:, None, :]
+            h = dA * h + dBu
+            y = jnp.einsum("ben,bn->be", h, Ct[:, 0].astype(jnp.float32))
+            return h, y
+        hT, y = body(h0, None)
+        ys = y[:, None]
+    else:
+        ys, hT = _ssm_scan(u, dt, Bt, Ct, A, h0, chunk=pick_chunk(S, 64))
+
+    ys = ys + params["D"] * u.astype(jnp.float32)
+    out = (ys * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = layers.dense(out, params["out_proj"])
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv, "ssm": hT.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    ed, n, kc = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_conv_dim
+    return {"conv": jnp.zeros((batch, kc - 1, ed), dtype),
+            "ssm": jnp.zeros((batch, ed, n), jnp.float32)}

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts: top-k router with capacity-limited, sort-free
+scatter/gather dispatch (GShard-style groups).
+
+Dispatch is *gather-based*, not einsum-based: tokens are scattered into a
+[G, E, C, D] buffer by (expert, position-in-expert) slot and gathered back,
+so dispatch costs **bytes, not FLOPs** — XLA's cost_analysis then reports
+only real expert matmul FLOPs (plus the capacity_factor overprovision),
+keeping the roofline honest.  The classic one-hot einsum dispatch would add
+a G*S*E*C*D FLOP term that is 100x the expert compute at these sizes.
+
+Groups: train/prefill group per batch row (keeps the dispatch local to the
+data shard under GSPMD); decode uses a single group over the batch.
+
+`moe_apply_ep` (shard_map all-to-all expert parallelism) lives in
+`repro.models.moe_ep` and is the beyond-paper optimized path (§Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH, shard
+from repro.models import layers
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    dt = layers.DEFAULT_DTYPE
+    return {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * s_in).astype(dt),
+        "w_up":   (jax.random.normal(ks[2], (e, d, f), jnp.float32) * s_in).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * s_out).astype(dt),
+    }
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4, >= 4
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, is_decode: bool = False):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar fp32)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_tok
+
+    if is_decode:
+        xg = x.reshape(1, B * S, D)           # one group over the batch
+    else:
+        xg = x                                 # group per batch row
+    # NOTE (§Perf E1, refuted): the dominant MoE-train collectives are f32
+    # all-reduces of dispatch-buffer-sized tensors over 'model' in the
+    # BACKWARD pass (343 GB/dev/layer on phi-3.5).  Constraining the
+    # forward tokens to unshard seq here did not move them (16.02 ->
+    # 16.06 s) — the reduction belongs to the scatter/gather VJPs, which
+    # only an explicit shard_map all-to-all EP dispatch removes (designed
+    # in DESIGN.md §4; future work).
+    G, T, _ = xg.shape
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)      # [G,T,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch): E * sum_e f_e * p_e -------------
+    me = jnp.mean(probs, axis=1)                               # [G,E]
+    ce = jnp.mean(jax.nn.one_hot(eidx[..., 0], E), axis=1)     # [G,E] top-1
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+    # ---- slot assignment --------------------------------------------------
+    e_flat = eidx.reshape(G, T * K)                             # [G, TK]
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)         # [G, TK, E]
+    pos = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot, axis=-1) - 1  # [G,TK]
+    keep = pos < C
+    slot = jnp.where(keep, e_flat * C + pos, E * C)             # drop slot
+
+    src = jnp.repeat(jnp.arange(T), K)                          # [TK]
+    tok = jnp.take(xg, src, axis=1)                             # [G, TK, D]
+
+    buf = jnp.zeros((G, E * C, D), xg.dtype)
+    buf = jax.vmap(lambda b, s, t: b.at[s].set(t, mode="drop"))(buf, slot, tok)
+    h = buf.reshape(G, E, C, D)
+    if not is_decode:
+        h = shard(h, BATCH, None, None, None)
+
+    # ---- expert computation (SwiGLU; W8A8-aware) ---------------------------
+    def expert_mm(spec, x_, w):
+        if isinstance(w, dict) and "q" in w:
+            from repro.quant.lm_quant import q_einsum
+            return q_einsum(spec, x_, w, out_dtype=x_.dtype)
+        return jnp.einsum(spec, x_, w)
+
+    g = expert_mm("gecd,edf->gecf", h, params["w_gate"])
+    u = expert_mm("gecd,edf->gecf", h, params["w_up"])
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    y = expert_mm("gecf,efd->gecd", a, params["w_down"])
+
+    # ---- combine ----------------------------------------------------------
+    y_flat = y.reshape(G, E * C, D)
+    out_tok = jax.vmap(lambda yy, s: jnp.take(yy, s, axis=0, mode="fill",
+                                              fill_value=0))(y_flat, slot)
+    out_tok = jnp.where(keep[..., None], out_tok, 0)
+    out_tok = out_tok.reshape(G, T, K, D)
+    out = jnp.einsum("gtkd,gtk->gtd", out_tok, gates.astype(out_tok.dtype))
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,45 @@
+"""Chunked time scans with rematerialization.
+
+A plain `lax.scan` over S timesteps saves every per-step carry for the
+backward pass (O(S * |carry|) memory).  `chunked_scan` nests two scans —
+outer over S/chunk chunks (whose boundary carries ARE saved), inner over
+chunk steps wrapped in `jax.checkpoint` (recomputed during backward) — so
+saved memory drops to O(S/chunk * |carry|) with one extra forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(body, carry, xs, chunk: int = 64, remat: bool = True):
+    """Like lax.scan(body, carry, xs) over leading axis S of every xs leaf,
+    but chunked for memory.  S must be divisible by chunk (callers pad)."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S <= chunk:
+        return jax.lax.scan(body, carry, xs)
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+
+    def inner(c, x_chunk):
+        return jax.lax.scan(body, c, x_chunk)
+
+    if remat:
+        inner = jax.checkpoint(inner,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    carry, ys_c = jax.lax.scan(inner, carry, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def pick_chunk(S: int, target: int = 64) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c

@@ -1,0 +1,458 @@
+"""Model assembly: heterogeneous block stacks (attention / SWA / mamba /
+mLSTM / sLSTM mixers x mlp / moe / none FFNs), scanned over pattern cycles.
+
+Parameters for each pattern position are stacked over `num_cycles` on a
+leading axis and consumed by `lax.scan` — HLO size is O(pattern length), not
+O(depth), which keeps 80-layer compiles tractable and (verified) makes XLA
+cost_analysis multiply body FLOPs by the trip count.
+
+Three entry points per model: `train_loss`, `prefill`, `decode_step`.
+Enc-dec (seamless) and VLM (paligemma, prefix-LM) wrap the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH, SEQ, shard
+from repro.models import attention, layers, mamba, moe, xlstm
+from repro.models.layers import init_norm, rms_norm
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def decode_alloc(seq_len: int) -> int:
+    """KV allocation for decode cells: seq_len filled + headroom, divisible
+    by 512 so every sharding layout (model=16, data*model=256) divides it."""
+    return round_up(seq_len + 1, 512)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def init_block(key, cfg, kind) -> dict:
+    mixer, ffn = kind
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg.d_model)}
+    if mixer in ("attn", "swa"):
+        p["attn"] = attention.init_attn(k1, cfg)
+    elif mixer == "mamba":
+        p["mamba"] = mamba.init_mamba(k1, cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(k1, cfg)
+    elif mixer == "slstm":
+        p["slstm"] = xlstm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["norm2"] = init_norm(cfg.d_model)
+        p["mlp"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(cfg.d_model)
+        p["moe"] = moe.init_moe(k2, cfg)
+    return p
+
+
+def block_apply(cfg, kind, p, x, *, mode, cache, pos, prefix_len):
+    """x [B,S,D] -> (x, new_cache, aux)."""
+    mixer, ffn = kind
+    h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    new_cache = None
+    if mixer in ("attn", "swa"):
+        window = cfg.window_size if mixer == "swa" else 0
+        h, new_cache = attention.attn_apply(
+            cfg, p["attn"], h, mode=mode, cache=cache, pos=pos,
+            prefix_len=prefix_len, window=window)
+    elif mixer == "mamba":
+        h, new_cache = mamba.mamba_apply(p["mamba"], h, cfg, mode=mode,
+                                         cache=cache)
+    elif mixer == "mlstm":
+        h, new_cache = xlstm.mlstm_apply(p["mlstm"], h, cfg, mode=mode,
+                                         cache=cache)
+    elif mixer == "slstm":
+        h, new_cache = xlstm.slstm_apply(p["slstm"], h, cfg, mode=mode,
+                                         cache=cache)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "mlp":
+        x = x + layers.mlp(p["mlp"], rms_norm(x, p["norm2"]["scale"],
+                                              cfg.norm_eps))
+    elif ffn == "moe":
+        h2, aux = moe.moe_apply(p["moe"],
+                                rms_norm(x, p["norm2"]["scale"], cfg.norm_eps),
+                                cfg, is_decode=(mode == "decode"))
+        x = x + h2
+    return x, new_cache, aux
+
+
+def _resid_shard(x, mode):
+    if mode == "decode" or x.shape[0] < 2:
+        return shard(x, BATCH if x.shape[0] > 1 else None, None, None)
+    return shard(x, BATCH, SEQ, None)
+
+
+def run_stack(cfg, blocks, stack_params, x, *, mode, caches=None,
+              pos=None, prefix_len=0, bidir=False):
+    """Scan the pattern-cycle over depth.
+
+    stack_params: tuple (per pattern position) of param trees with leading
+    num_cycles axis.  caches: matching tuple of cache trees (or None).
+    Returns (x, new_caches, aux_sum).
+    """
+    n_pos = len(blocks)
+    if caches is None:
+        caches = tuple({} for _ in range(n_pos))
+
+    def body(carry, xs):
+        x, aux = carry
+        p_sl, c_sl = xs
+        x = _resid_shard(x, mode)
+        new_c = []
+        for i, kind in enumerate(blocks):
+            cache_i = c_sl[i] if c_sl[i] else None
+            if bidir and kind[0] == "attn":
+                # encoder: bidirectional attention (no cache)
+                h = rms_norm(x, p_sl[i]["norm1"]["scale"], cfg.norm_eps)
+                h, _ = attention.attn_apply(
+                    cfg, p_sl[i]["attn"], h, mode="train", cache=None,
+                    pos=None, prefix_len=2 ** 30, window=0)
+                x = x + h
+                x = x + layers.mlp(
+                    p_sl[i]["mlp"],
+                    rms_norm(x, p_sl[i]["norm2"]["scale"], cfg.norm_eps))
+                a = jnp.zeros((), jnp.float32)
+                nc = None
+            else:
+                x, nc, a = block_apply(cfg, kind, p_sl[i], x, mode=mode,
+                                       cache=cache_i, pos=pos,
+                                       prefix_len=prefix_len)
+            new_c.append(nc if nc is not None else {})
+            aux = aux + a
+        x = _resid_shard(x, mode)
+        return (x, aux), tuple(new_c)
+
+    if mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stack_params, caches))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# chunked LM loss (bounded memory at 256k vocab)
+# ---------------------------------------------------------------------------
+def lm_loss(x, head_w, targets, mask=None, seq_chunk: int = 512):
+    """x [B,S,D], head_w [D,V], targets [B,S] -> mean xent (fp32)."""
+    B, S, D = x.shape
+    c = min(seq_chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    wt = head_w.swapaxes(0, 1)  # [V, D]
+    xs = (x.reshape(B, n, c, D).swapaxes(0, 1),
+          targets.reshape(B, n, c).swapaxes(0, 1),
+          (mask.reshape(B, n, c).swapaxes(0, 1) if mask is not None
+           else jnp.ones((n, B, c), jnp.float32)))
+
+    def body(acc, xs_i):
+        xc, tc, mc = xs_i
+        logits = jnp.einsum("bcd,dv->bcv", xc, head_w,
+                            preferred_element_type=jnp.float32)
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        lab = jnp.take(wt, tc, axis=0)                    # [B,c,D]
+        lab_logit = jnp.einsum("bcd,bcd->bc", xc.astype(jnp.float32),
+                               lab.astype(jnp.float32))
+        nll = (lse - lab_logit) * mc.astype(jnp.float32)
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mc)), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (incl. VLM prefix variant)
+# ---------------------------------------------------------------------------
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4 + len(cfg.blocks))
+        params = {
+            "embed": layers.init_embed(keys[0], cfg.padded_vocab, cfg.d_model),
+            "final_norm": init_norm(cfg.d_model),
+            "lm_head": layers.init_lm_head(keys[1], cfg.d_model,
+                                           cfg.padded_vocab),
+            "blocks": self._init_blocks(keys[2], cfg.blocks, cfg.num_cycles),
+        }
+        if cfg.frontend is not None:
+            params["frontend"] = layers.init_dense(
+                keys[3], cfg.d_model, cfg.d_model)
+        return params
+
+    def _init_blocks(self, key, blocks, cycles):
+        out = []
+        for i, kind in enumerate(blocks):
+            ks = jax.random.split(jax.random.fold_in(key, i), cycles)
+            out.append(jax.vmap(
+                lambda k, kind=kind: init_block(k, self.cfg, kind))(ks))
+        return tuple(out)
+
+    # -- embedding of a batch (handles vlm prefix) ---------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], batch["inputs"])
+        prefix_len = 0
+        if cfg.frontend is not None and "prefix_embeds" in batch:
+            pre = layers.dense(batch["prefix_embeds"].astype(x.dtype),
+                               params["frontend"]["w"])
+            x = jnp.concatenate([pre, x], axis=1)
+            prefix_len = pre.shape[1]
+        if not cfg.prefix_bidir:
+            prefix_len = 0
+        return x, prefix_len
+
+    # -- train ----------------------------------------------------------------
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, batch)
+        x, _, aux = run_stack(cfg, cfg.blocks, params["blocks"], x,
+                              mode="train", prefix_len=prefix_len)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        # loss over the text positions only (skip any prefix)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        loss = lm_loss(x, params["lm_head"]["w"], batch["targets"],
+                       batch.get("mask"))
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_coef * aux
+        return loss, {"loss": loss, "aux": aux}
+
+    # -- caches ---------------------------------------------------------------
+    def _cache_proto(self, kind, batch, alloc):
+        cfg = self.cfg
+        mixer = kind[0]
+        if mixer == "attn":
+            return attention.init_attn_cache(cfg, batch, alloc)
+        if mixer == "swa":
+            return attention.init_attn_cache(cfg, batch,
+                                             min(cfg.window_size, alloc))
+        if mixer == "mamba":
+            return mamba.init_mamba_cache(cfg, batch)
+        if mixer == "mlstm":
+            return xlstm.init_mlstm_cache(cfg, batch)
+        if mixer == "slstm":
+            return xlstm.init_slstm_cache(cfg, batch)
+        raise ValueError(mixer)
+
+    def init_cache(self, batch: int, alloc: int, stacked: bool = True):
+        C = self.cfg.num_cycles
+        out = []
+        for kind in self.cfg.blocks:
+            proto = jax.eval_shape(lambda k=kind: self._cache_proto(k, batch,
+                                                                    alloc))
+            out.append(jax.tree.map(
+                lambda s: jnp.zeros((C,) + s.shape, s.dtype), proto))
+        caches = tuple(out)
+        if stacked:
+            return caches
+        # unrolled layout: tuple over cycles of per-position caches
+        return tuple(
+            tuple(jax.tree.map(lambda a: a[ci], pos_cache)
+                  for pos_cache in caches)
+            for ci in range(C))
+
+    # -- prefill / decode -----------------------------------------------------
+    def prefill(self, params, batch, alloc: int | None = None):
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        caches = self.init_cache(B, alloc or S)
+        x, caches, _ = run_stack(cfg, cfg.blocks, params["blocks"], x,
+                                 mode="prefill", caches=caches,
+                                 prefix_len=prefix_len)
+        x = rms_norm(x[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+        logits = layers.lm_logits(params["lm_head"], x)[:, 0]
+        if cfg.decode_unroll:
+            C = cfg.num_cycles
+            caches = tuple(
+                tuple(jax.tree.map(lambda a: a[ci], pc) for pc in caches)
+                for ci in range(C))
+        return logits, caches
+
+    def decode_step(self, params, caches, token, pos):
+        """token [B,1] int32; pos scalar int32 (same position per row).
+
+        With cfg.decode_unroll the layer loop is a python loop: per-layer
+        caches are separate top-level (donated) buffers that XLA updates
+        in place — a scanned cache would be fully rewritten every step
+        (EXPERIMENTS.md §Perf C3)."""
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], token)
+        if not cfg.decode_unroll:
+            x, caches, _ = run_stack(cfg, cfg.blocks, params["blocks"], x,
+                                     mode="decode", caches=caches, pos=pos)
+        else:
+            new_caches = []
+            for ci in range(cfg.num_cycles):
+                p_sl = jax.tree.map(lambda a: a[ci], params["blocks"])
+                x = _resid_shard(x, "decode")
+                new_c = []
+                for i, kind in enumerate(cfg.blocks):
+                    x, nc, _ = block_apply(
+                        cfg, kind, p_sl[i], x, mode="decode",
+                        cache=caches[ci][i], pos=pos, prefix_len=0)
+                    new_c.append(nc if nc is not None else {})
+                new_caches.append(tuple(new_c))
+            caches = tuple(new_caches)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = layers.lm_logits(params["lm_head"], x)[:, 0]
+        return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless-m4t): frame-embedding encoder + token decoder
+# ---------------------------------------------------------------------------
+ENC_BLOCK = (("attn", "mlp"),)
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        enc_cycles = cfg.num_encoder_layers
+        dec_cycles = cfg.num_cycles
+        lm = LM(cfg)
+        return {
+            "frontend": layers.init_dense(k1, cfg.d_model, cfg.d_model),
+            "embed": layers.init_embed(k2, cfg.padded_vocab, cfg.d_model),
+            "enc_blocks": lm._init_blocks(k3, ENC_BLOCK, enc_cycles),
+            "enc_norm": init_norm(cfg.d_model),
+            "dec_blocks": self._init_dec_blocks(k4, dec_cycles),
+            "final_norm": init_norm(cfg.d_model),
+            "lm_head": layers.init_lm_head(k5, cfg.d_model, cfg.padded_vocab),
+        }
+
+    def _init_dec_blocks(self, key, cycles):
+        cfg = self.cfg
+
+        def one(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "norm1": init_norm(cfg.d_model),
+                "self": attention.init_attn(k1, cfg),
+                "norm2": init_norm(cfg.d_model),
+                "cross": attention.init_attn(k2, cfg),
+                "norm3": init_norm(cfg.d_model),
+                "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff),
+            }
+        ks = jax.random.split(key, cycles)
+        return (jax.vmap(one)(ks),)
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = layers.dense(frames.astype(layers.DEFAULT_DTYPE),
+                         params["frontend"]["w"])
+        x, _, _ = run_stack(cfg, ENC_BLOCK, params["enc_blocks"], x,
+                            mode="train", bidir=True)
+        return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    def _dec_stack(self, params, x, enc_out, *, mode, caches=None, pos=None):
+        cfg = self.cfg
+        if caches is None:
+            caches = ({},)
+
+        def body(carry, xs):
+            x, _ = carry
+            p, c = xs
+            c = c[0] if c[0] else None
+            x = _resid_shard(x, mode)
+            h = rms_norm(x, p[0]["norm1"]["scale"], cfg.norm_eps)
+            h, self_c = attention.attn_apply(
+                cfg, p[0]["self"], h, mode=mode,
+                cache=None if c is None else c["self"], pos=pos)
+            x = x + h
+            h = rms_norm(x, p[0]["norm2"]["scale"], cfg.norm_eps)
+            if mode == "decode":
+                h, cross_c = attention.attn_apply(
+                    cfg, p[0]["cross"], h, mode="decode",
+                    cache=c["cross"], pos=pos, is_cross=True)
+            else:
+                h, cross_c = attention.attn_apply(
+                    cfg, p[0]["cross"], h, mode=mode,
+                    cache=None if c is None else c["cross"],
+                    kv_override=enc_out)
+            x = x + h
+            x = x + layers.mlp(p[0]["mlp"],
+                               rms_norm(x, p[0]["norm3"]["scale"],
+                                        cfg.norm_eps))
+            new_c = {} if self_c is None else {"self": self_c,
+                                               "cross": cross_c}
+            return (x, carry[1]), (new_c,)
+
+        if mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, _), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["dec_blocks"], caches))
+        return x, new_caches
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = layers.embed_lookup(params["embed"], batch["inputs"])
+        x, _ = self._dec_stack(params, x, enc_out, mode="train")
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        loss = lm_loss(x, params["lm_head"]["w"], batch["targets"],
+                       batch.get("mask"))
+        return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    def init_cache(self, batch: int, alloc: int, src_len: int):
+        cfg = self.cfg
+        C = cfg.num_cycles
+        proto = {
+            "self": jax.eval_shape(
+                lambda: attention.init_attn_cache(cfg, batch, alloc)),
+            "cross": jax.eval_shape(
+                lambda: attention.init_attn_cache(cfg, batch, src_len)),
+        }
+        return (jax.tree.map(lambda s: jnp.zeros((C,) + s.shape, s.dtype),
+                             proto),)
+
+    def prefill(self, params, batch, alloc: int | None = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = layers.embed_lookup(params["embed"], batch["inputs"])
+        B, S = x.shape[0], x.shape[1]
+        caches = self.init_cache(B, alloc or S, enc_out.shape[1])
+        x, caches = self._dec_stack(params, x, enc_out, mode="prefill",
+                                    caches=caches)
+        x = rms_norm(x[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+        return layers.lm_logits(params["lm_head"], x)[:, 0], caches
+
+    def decode_step(self, params, caches, token, pos):
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], token)
+        x, caches = self._dec_stack(params, x, None, mode="decode",
+                                    caches=caches, pos=pos)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return layers.lm_logits(params["lm_head"], x)[:, 0], caches
+
+
+def build_model(cfg):
+    return EncDecLM(cfg) if cfg.is_encoder_decoder else LM(cfg)

@@ -1,0 +1,166 @@
+"""Exact int8 operation semantics (the pure-jnp oracle layer).
+
+These functions define the integer arithmetic the Pallas kernels must
+reproduce bit-exactly (kernels/ref.py re-exports them): int8 operands,
+int32 accumulation, power-of-two rescale (arithmetic shift), saturation to
+[-128, 127] — the TPU analogue of the paper's CMSIS-NN / PULP-NN kernels.
+
+`rounding="floor"` matches the paper/CMSIS `__SSAT(sum >> shift, 8)`
+truncation; `rounding="nearest"` adds the half-LSB before shifting
+(beyond-paper accuracy option, still shift-only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def rshift_sat8(acc, shift: int, rounding: str = "floor"):
+    """int32 accumulator -> int8 via arithmetic shift + saturate."""
+    acc = acc.astype(jnp.int32)
+    if shift > 0:
+        if rounding == "nearest":
+            acc = acc + (1 << (shift - 1))
+        acc = jnp.right_shift(acc, shift)
+    elif shift < 0:
+        acc = jnp.left_shift(acc, -shift)
+    return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def sat8(x):
+    return jnp.clip(x.astype(jnp.int32), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def matmul_q7(a, b, shift: int, rounding: str = "floor"):
+    """[..., M, K] int8 x [..., K, N] int8 -> int8, int32 accumulation.
+
+    The `mat_mult_q7` family: the transposed-B / SIMD variants of the paper
+    are memory layouts of the same arithmetic; on TPU the MXU consumes
+    int8 pairs natively (preferred_element_type=int32)."""
+    acc = jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return rshift_sat8(acc, shift, rounding)
+
+
+def matmul_q7_acc(a, b):
+    """Raw int32 accumulator (for fused pipelines)."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def add_q7(a, b, shift_a: int = 0, shift_b: int = 0):
+    """Saturating int8 addition with per-operand alignment shifts."""
+    aa = jnp.left_shift(a.astype(jnp.int32), max(-shift_a, 0)) \
+        if shift_a <= 0 else jnp.right_shift(a.astype(jnp.int32), shift_a)
+    bb = jnp.left_shift(b.astype(jnp.int32), max(-shift_b, 0)) \
+        if shift_b <= 0 else jnp.right_shift(b.astype(jnp.int32), shift_b)
+    return sat8(aa + bb)
+
+
+def conv2d_q7(x, w, bias, out_shift: int, bias_shift: int,
+              stride: int = 1, padding: str = "VALID",
+              rounding: str = "floor"):
+    """NHWC int8 conv, int32 accumulation, shifted bias, shift+sat output.
+
+    x [B,H,W,Cin] int8; w [KH,KW,Cin,Cout] int8; bias [Cout] int8.
+    bias is left-shifted by `bias_shift` into the accumulator's Qm.n
+    (paper Alg. 6 line 10)."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    if bias is not None:
+        b = bias.astype(jnp.int32)
+        b = jnp.left_shift(b, bias_shift) if bias_shift >= 0 \
+            else jnp.right_shift(b, -bias_shift)
+        acc = acc + b
+    return rshift_sat8(acc, out_shift, rounding)
+
+
+def relu_q7(x):
+    return jnp.maximum(x, 0).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# integer square root (Newton-Raphson, paper Alg. 4) and squash (Eq. 8)
+# ---------------------------------------------------------------------------
+def isqrt_newton(n):
+    """Integer sqrt of int32 n (elementwise, vectorized Newton-Raphson).
+
+    Follows Alg. 4: x0 = n/2, x_{k+1} = (x_k + n/x_k)/2, stop when the next
+    iterate stops decreasing.  A fixed 32-iteration loop (Newton from n/2
+    halves the exponent gap per step; 32 covers any int32) with the
+    monotonicity guard makes it bit-exact with the sequential algorithm."""
+    n = n.astype(jnp.int32)
+    x0 = jnp.maximum(n // 2, 1)
+
+    def body(_, x):
+        nxt = (x + n // jnp.maximum(x, 1)) // 2
+        return jnp.where(nxt < x, nxt, x)
+
+    x = jax.lax.fori_loop(0, 32, body, x0)
+    # n in {0,1}: x0 heuristics
+    x = jnp.where(n <= 1, n, x)
+    return x
+
+
+SQUASH_GUARD_BITS = 10
+
+
+def squash_q7(s, in_frac: int, out_frac: int = 7):
+    """Integer squash (paper Eq. 8) over the last axis.
+
+    s int8 [..., D] with `in_frac` (i) fractional bits; returns int8 with
+    `out_frac` (o) fractional bits.  Derivation: with Q = sum(s^2) (2i frac
+    bits) and S = isqrt(Q) (i frac bits),
+        v_f  = (||s|| / (1 + ||s||^2)) * s_f
+        v_q  = v_f * 2^o = [S * 2^o / (2^{2i} + Q)] * s_q
+    The bracket is Eq. 8's  (||s|| << (o-i)) / ((1<<i) + (Q>>i))  up to the
+    integer-division order; we carry SQUASH_GUARD_BITS (P) extra bits
+    through the division so the factor keeps ~3 decimal digits:
+        ratio = (S << (o - i + P)) // ((2^{2i} + Q) >> i)
+        v     = sat8((ratio * s) >> P)
+    Values: S <= 127*sqrt(D) < 2^9 for D <= 16, so int32 never overflows.
+    """
+    s32 = s.astype(jnp.int32)
+    Q = jnp.sum(s32 * s32, axis=-1, keepdims=True)
+    S = isqrt_newton(Q)
+    P = SQUASH_GUARD_BITS
+    shift = out_frac - in_frac + P
+    num = jnp.left_shift(S, max(shift, 0)) if shift >= 0 \
+        else jnp.right_shift(S, -shift)
+    den = (1 << in_frac) + jnp.right_shift(Q, in_frac)
+    ratio = num // jnp.maximum(den, 1)
+    v = jnp.right_shift(ratio * s32, P)
+    return jnp.clip(v, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def softmax_q7(x, in_frac: int):
+    """Shift-based integer softmax over the last axis -> Q0.7 output.
+
+    Faithful to the arm_softmax_q7 approach: probabilities are powers of two
+    of the integer part of (x - max), normalized to 128 = 1.0, saturated to
+    127.  Coarse but branch/LUT-free."""
+    x32 = x.astype(jnp.int32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    # integer exponent of 2^(x-m) in value units
+    e = jnp.right_shift(x32 - m, in_frac)          # <= 0
+    e = jnp.maximum(e, -20)
+    p = jnp.left_shift(jnp.ones_like(e), 20 + e)   # 2^(20+e)
+    tot = jnp.sum(p, axis=-1, keepdims=True)   # <= n_cls * 2^20, fits int32
+    c = jnp.left_shift(p, 7) // jnp.maximum(tot, 1)
+    return jnp.clip(c, 0, INT8_MAX).astype(jnp.int8)
+
+
+def softmax_q7_precise(x, in_frac: int):
+    """Beyond-paper variant: dequantize -> fp32 softmax -> requant Q0.7.
+    (What you would do on a TPU where the VPU has fast exp; kept for the
+    accuracy/throughput trade-off study.)"""
+    xf = x.astype(jnp.float32) * (2.0 ** -in_frac)
+    p = jax.nn.softmax(xf, axis=-1)
+    return jnp.clip(jnp.round(p * 128.0), 0, INT8_MAX).astype(jnp.int8)

@@ -1,0 +1,101 @@
+"""W8A8 quantization of transformer parameters — the paper's Qm.n
+framework applied to LM serving (beyond-paper, DESIGN §7).
+
+Weights: int8 with per-output-channel power-of-two exponents (Alg. 7 run
+per channel — granularity the paper marks as future work; still shift-only
+so the MCU-compatible contract holds).  Activations: dynamic per-tensor
+power-of-two quantization at matmul entry (on TPU the dequant multiply is
+a cheap VPU op; the paper's static calibration remains available through
+repro.quant.ptq for the CapsNet path — deviation noted in DESIGN.md).
+
+A quantized weight leaf is a dict {"q": int8 [..., out], "n": int32 [out]}.
+`layers.dense` and the MoE einsums dispatch on that structure, so the same
+model code runs both float and W8A8 (serve.py --quant w8a8, dryrun --quant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QUANT_LEAF_NAMES = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "up_proj", "down_proj", "in_proj", "out_proj", "wx",
+    "ffn_up", "ffn_down",
+}
+HEAD_LEAF_NAMES = {"w"}        # lm_head / frontend dense
+
+
+def _leaf_name(path) -> str:
+    k = path[-1]
+    return str(getattr(k, "key", getattr(k, "idx", k)))
+
+
+def _quantize_weight(w):
+    """[..., K, N] -> {"q" int8, "n" int32 [..., N]}: per-output-channel
+    power-of-two exponents, reduced over the contraction dim (axis -2)
+    only, so stacked-cycle / expert leading dims are preserved (the layer
+    scan slices q and n together)."""
+    wf = w.astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(wf), axis=-2)
+    n = jnp.clip(jnp.floor(jnp.log2(127.0 / jnp.maximum(max_abs, 1e-30))),
+                 -24, 24).astype(jnp.int32)
+    q = jnp.clip(jnp.round(wf * jnp.exp2(n.astype(jnp.float32))[..., None, :]),
+                 -128, 127).astype(jnp.int8)
+    return {"q": q, "n": n}
+
+
+def quantize_lm_params(params, quantize_head: bool = True):
+    """Transform a float param tree into the W8A8 tree (norms, embeddings,
+    biases and small vectors stay float)."""
+    def visit(path, leaf):
+        name = _leaf_name(path)
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if name in QUANT_LEAF_NAMES and leaf.ndim >= 2:
+            return _quantize_weight(leaf)
+        if quantize_head and name == "w" and "lm_head" in names:
+            return _quantize_weight(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def is_qweight(w) -> bool:
+    return isinstance(w, dict) and set(w) >= {"q", "n"}
+
+
+def quantize_activation(x):
+    """Dynamic per-tensor pow2 activation quantization -> (int8, exponent)."""
+    xf = x.astype(jnp.float32)
+    e = jnp.clip(jnp.floor(jnp.log2(127.0 /
+                                    jnp.maximum(jnp.max(jnp.abs(xf)),
+                                                1e-30))), -24, 24)
+    q = jnp.clip(jnp.round(xf * jnp.exp2(e)), -128, 127).astype(jnp.int8)
+    return q, e
+
+
+def q_dense(x, w: dict, out_dtype=jnp.bfloat16):
+    """W8A8 dense: x [..., K] float, w {"q" [K,N], "n" [N]}."""
+    xq, xe = quantize_activation(x)
+    acc = jax.lax.dot_general(
+        xq, w["q"], (((x.ndim - 1,), (w["q"].ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    scale = jnp.exp2(-(xe + w["n"].astype(jnp.float32)))
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def q_einsum(spec: str, x, w: dict, out_dtype=jnp.bfloat16):
+    """Quantized einsum for the MoE expert matmuls ('gecd,edf->gecf',
+    'gecf,efd->gecd'): w["q"] [E,K,N], w["n"] [E,N] -> scale [1,E,1,N]."""
+    xq, xe = quantize_activation(x)
+    acc = jnp.einsum(spec, xq.astype(jnp.int8), w["q"],
+                     preferred_element_type=jnp.int32)
+    n = w["n"].astype(jnp.float32)[None, :, None, :]
+    scale = jnp.exp2(-(xe + n))
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def quantized_bytes(qparams) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(qparams):
+        total += leaf.size * leaf.dtype.itemsize
+    return int(total)

@@ -1,0 +1,150 @@
+"""Post-training quantization framework (paper §4, Algorithms 6 & 7).
+
+Input:  a trained float CapsNet + a reference (calibration) dataset.
+Output: int8 weights/bias + the complete shift table for the int8
+inference pass (repro.core.capsnet_q7) — output shift and bias shift per
+matmul/conv, per-routing-iteration shifts for the capsule layer (Alg. 6:
+calc_caps_output and calc_agreement take one scaling factor per iteration).
+
+The activation Qm.n formats are *static*: calibrated once from the maximum
+absolute values observed on the reference dataset, exactly as the paper
+prescribes for CMSIS-NN/PULP-NN compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import capsnet as C
+from repro.core.capsnet_q7 import QCapsNet
+from repro.quant import qformat as qf
+
+
+@dataclasses.dataclass
+class CalibStats:
+    max_abs: dict           # trace point -> float
+
+
+def calibrate(params, cfg, calib_images, batch: int = 64) -> CalibStats:
+    """Run the float model over the reference dataset recording max|x| at
+    every quantization point (Alg. 6 line 8)."""
+    fwd = jax.jit(lambda x: C.capsnet_forward(params, x, cfg,
+                                              with_trace=True)[1])
+    maxes: dict[str, float] = {}
+    n = calib_images.shape[0]
+    for i in range(0, n, batch):
+        trace = fwd(calib_images[i:i + batch])
+        for k, t in trace.items():
+            m = float(jnp.max(jnp.abs(t)))
+            maxes[k] = max(maxes.get(k, 0.0), m)
+    return CalibStats(maxes)
+
+
+def quantize_capsnet(params, cfg, calib_images, *,
+                     rounding: str = "floor",
+                     per_channel: bool = False) -> QCapsNet:
+    """Alg. 6: quantize weights & bias (Alg. 7), derive all shifts."""
+    stats = calibrate(params, cfg, calib_images)
+    fb = qf.frac_bits
+    weights: dict = {}
+    shifts: dict = {}
+
+    f_act = fb(stats.max_abs["input"])         # input image format
+    shifts["input_frac"] = f_act
+
+    # --- convolutional stack -------------------------------------------
+    for i in range(len(cfg.conv_filters)):
+        p = params[f"conv{i}"]
+        f_w = fb(float(jnp.max(jnp.abs(p["w"]))))
+        f_b = fb(float(jnp.max(jnp.abs(p["b"])))) if p["b"].size else f_w
+        f_out = fb(stats.max_abs[f"conv{i}_out"])
+        weights[f"conv{i}"] = {"w": qf.quantize(p["w"], f_w),
+                               "b": qf.quantize(p["b"], f_b)}
+        shifts[f"conv{i}_w_frac"] = f_w
+        shifts[f"conv{i}_out_frac"] = f_out
+        shifts[f"conv{i}_out_shift"] = qf.out_shift(f_act, f_w, f_out)
+        shifts[f"conv{i}_bias_shift"] = qf.bias_shift(f_act, f_w, f_b)
+        f_act = f_out                           # relu preserves the format
+
+    # --- primary capsule layer ------------------------------------------
+    p = params["pcap"]
+    f_w = fb(float(jnp.max(jnp.abs(p["w"]))))
+    f_b = fb(float(jnp.max(jnp.abs(p["b"]))))
+    f_out = fb(stats.max_abs["pcap_out"])
+    weights["pcap"] = {"w": qf.quantize(p["w"], f_w),
+                       "b": qf.quantize(p["b"], f_b)}
+    shifts["pcap_w_frac"] = f_w
+    shifts["pcap_out_frac"] = f_out
+    shifts["pcap_out_shift"] = qf.out_shift(f_act, f_w, f_out)
+    shifts["pcap_bias_shift"] = qf.bias_shift(f_act, f_w, f_b)
+    # squash output is Q0.7 by construction (paper §3.2)
+
+    # --- capsule layer ----------------------------------------------------
+    W = params["caps"]["W"]
+    f_W = fb(float(jnp.max(jnp.abs(W))))
+    f_uhat = fb(stats.max_abs["u_hat"])
+    weights["caps"] = {"W": qf.quantize(W, f_W)}
+    shifts["caps_W_frac"] = f_W
+    shifts["uhat_frac"] = f_uhat
+    shifts["uhat_shift"] = qf.out_shift(7, f_W, f_uhat)   # u is Q0.7
+
+    # logits format: shared across iterations (b accumulates agreements)
+    max_logit = max([stats.max_abs.get(f"logits_iter{r}", 0.0)
+                     for r in range(cfg.routings)] + [1e-6])
+    f_logit = min(fb(max_logit), 7)
+    shifts["logit_frac"] = f_logit
+
+    for r in range(cfg.routings):
+        f_s = fb(stats.max_abs[f"s_iter{r}"])
+        shifts[f"caps_out_frac_{r}"] = f_s
+        # c is Q0.7
+        shifts[f"caps_out_shift_{r}"] = qf.out_shift(f_uhat, 7, f_s)
+        if r < cfg.routings - 1:
+            # agreement <u_hat, v>: u_hat f_uhat, v Q0.7 -> logits format
+            shifts[f"agree_shift_{r}"] = qf.out_shift(f_uhat, 7, f_logit)
+
+    return QCapsNet(cfg=cfg, weights=weights, shifts=shifts,
+                    rounding=rounding)
+
+
+def quantize_input(x, frac: int = 7):
+    """Images in [0,1] -> Q0.7 int8."""
+    return qf.quantize(x, frac)
+
+
+# ---------------------------------------------------------------------------
+# evaluation helpers (Table 2 analogue)
+# ---------------------------------------------------------------------------
+def footprint_report(params, qmodel: QCapsNet) -> dict:
+    fp32 = C.param_bytes_fp32(params)
+    int8 = qmodel.memory_bytes()
+    return {
+        "fp32_kb": fp32 / 1024.0,
+        "int8_kb": int8 / 1024.0,
+        "saving_pct": 100.0 * (1 - int8 / fp32),
+    }
+
+
+def eval_float(params, cfg, images, labels, batch: int = 256) -> float:
+    fwd = jax.jit(lambda x: C.capsnet_forward(params, x, cfg))
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        v = fwd(images[i:i + batch])
+        pred = jnp.argmax(C.class_lengths(v), -1)
+        correct += int(jnp.sum(pred == labels[i:i + batch]))
+    return correct / images.shape[0]
+
+
+def eval_q7(qmodel: QCapsNet, images, labels, batch: int = 256) -> float:
+    from repro.core.capsnet_q7 import qcapsnet_forward, qclass_lengths
+    fwd = jax.jit(lambda x: qcapsnet_forward(qmodel, x))
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        xq = quantize_input(images[i:i + batch], qmodel.shifts["input_frac"])
+        v = fwd(xq)
+        pred = jnp.argmax(qclass_lengths(qmodel, v), -1)
+        correct += int(jnp.sum(pred == labels[i:i + batch]))
+    return correct / images.shape[0]

@@ -1,0 +1,90 @@
+"""Qm.n power-of-two quantization format calculus (paper §4, Alg. 7).
+
+Symmetric, uniform, static, power-of-two scaling: a float A is stored as
+round(A * 2^n) in int8, where n is the number of (possibly *virtual*)
+fractional bits.  "Virtual" (paper's term): when max|x| < 1/127 the
+framework keeps increasing n past 7 — physically the value still fits in
+8 bits, but the format exponent exceeds the Q0.7 barrier.
+
+Because scaling is a power of two, every rescale in the int8 inference pass
+is a bit shift:
+    out_shift  = f_ia + f_ib - f_o      (right shift of the int32 accum)
+    bias_shift = f_ia + f_ib - f_b      (left shift aligning the bias)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+MAX_FRAC_BITS = 24
+
+
+def frac_bits(max_abs: float) -> int:
+    """Number of fractional bits n for the Qm.n format covering
+    [-max_abs, max_abs] (Alg. 7: maximal n with round(max_abs*2^n) <= 127,
+    capped at MAX_FRAC_BITS for degenerate ranges)."""
+    max_abs = float(max_abs)
+    if max_abs <= 0 or math.isnan(max_abs):
+        return MAX_FRAC_BITS
+    n = int(math.floor(math.log2(INT8_MAX / max_abs)))
+    # floating point edge: ensure round(max_abs * 2^n) <= 127 < round(*2^(n+1))
+    while round(max_abs * 2.0 ** (n + 1)) <= INT8_MAX and n < MAX_FRAC_BITS:
+        n += 1
+    while round(max_abs * 2.0 ** n) > INT8_MAX and n > -MAX_FRAC_BITS:
+        n -= 1
+    return n
+
+
+def quantize(x, n: int):
+    """float -> int8 in Qm.n (round-to-nearest, clip to [-128, 127])."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) * (2.0 ** n))
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q, n: int):
+    return jnp.asarray(q, jnp.float32) * (2.0 ** -n)
+
+
+def quantize_per_channel(x, axis: int):
+    """Beyond-paper: per-output-channel power-of-two scales (still
+    shift-only in hardware).  Returns (int8 array, n per channel [int32])."""
+    x = np.asarray(x, np.float32)
+    moved = np.moveaxis(x, axis, 0)
+    ns = np.array([frac_bits(np.abs(c).max()) for c in moved], np.int32)
+    scale = (2.0 ** ns).reshape((-1,) + (1,) * (moved.ndim - 1))
+    q = np.clip(np.round(moved * scale), INT8_MIN, INT8_MAX).astype(np.int8)
+    return jnp.asarray(np.moveaxis(q, 0, axis)), jnp.asarray(ns)
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """An int8 tensor + its Qm.n fractional-bit count."""
+    q: jax.Array          # int8
+    n: int                # fractional bits
+
+    @property
+    def float(self):
+        return dequantize(self.q, self.n)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.q.shape))
+
+
+def qtensor(x, n: int | None = None) -> QTensor:
+    if n is None:
+        n = frac_bits(float(jnp.max(jnp.abs(x))))
+    return QTensor(quantize(x, n), n)
+
+
+def out_shift(f_ia: int, f_ib: int, f_o: int) -> int:
+    return f_ia + f_ib - f_o
+
+
+def bias_shift(f_ia: int, f_ib: int, f_b: int) -> int:
+    return f_ia + f_ib - f_b

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run process forces 512 itself; forcing it
+# here would poison every smoke test / benchmark — see the dryrun docstring)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_lm_config(**kw):
+    from repro.configs.base import ModelConfig
+    base = dict(name="tiny", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=256)
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,106 @@
+"""Paper-core behaviour: CapsNet learns, PTQ reproduces Table 2's
+footprint saving and small accuracy delta, int8 pipeline is sane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capsnet as C
+from repro.data.synthetic import make_image_dataset
+from repro.optim.adam import AdamW
+from repro.quant import ptq
+
+
+def train_small(cfg, steps=60, batch=64, seed=0):
+    params = C.init_capsnet(jax.random.key(seed), cfg)
+    opt = AdamW(lr=cfg.lr, clip_norm=0.0, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        def loss_fn(p):
+            v = C.capsnet_forward(p, x, cfg)
+            return C.margin_loss(v, y, cfg.num_classes), v
+        (loss, v), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state, loss, C.accuracy(v, y)
+
+    kind = cfg.name.split("_")[-1]
+    accs = []
+    for i in range(steps):
+        x, y = make_image_dataset(kind, batch, seed=i)
+        params, state, loss, acc = step(params, state, jnp.asarray(x),
+                                        jnp.asarray(y))
+        accs.append(float(acc))
+    return params, accs
+
+
+@pytest.fixture(scope="module")
+def trained_mnist():
+    return train_small(C.MNIST, steps=70)
+
+
+def test_capsnet_geometry_matches_paper():
+    """Table 2/7 cross-check: layer shapes & fp32 footprints."""
+    assert C.MNIST.num_input_caps == 1024          # 10x1024x6x4 "L"
+    assert C.SMALLNORB.num_input_caps == 1600      # 5x1600x6x4 "M"
+    assert C.CIFAR10.num_input_caps == 64          # 10x64x5x4  "S"
+    p = C.init_capsnet(jax.random.key(0), C.SMALLNORB)
+    kb = C.param_bytes_fp32(p) / 1024
+    assert abs(kb - 1182.34) < 30                  # paper: 1182.34 KB
+    p = C.init_capsnet(jax.random.key(0), C.CIFAR10)
+    kb = C.param_bytes_fp32(p) / 1024
+    assert abs(kb - 461.19) < 15                   # paper: 461.19 KB
+
+
+def test_capsnet_learns(trained_mnist):
+    _, accs = trained_mnist
+    assert np.mean(accs[-10:]) > 0.85, np.mean(accs[-10:])
+    assert np.mean(accs[-10:]) > np.mean(accs[:5]) + 0.3
+
+
+def test_ptq_footprint_saving_75pct(trained_mnist):
+    params, _ = trained_mnist
+    calib = jnp.asarray(make_image_dataset("mnist", 128, seed=5555)[0])
+    qm = ptq.quantize_capsnet(params, C.MNIST, calib)
+    rep = ptq.footprint_report(params, qm)
+    assert 74.5 <= rep["saving_pct"] <= 75.0       # paper: 74.99 %
+
+
+def test_ptq_small_accuracy_loss(trained_mnist):
+    params, _ = trained_mnist
+    calib = jnp.asarray(make_image_dataset("mnist", 128, seed=5555)[0])
+    tx, ty = make_image_dataset("mnist", 256, seed=9999)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+    acc_f = ptq.eval_float(params, C.MNIST, tx, ty)
+    qm = ptq.quantize_capsnet(params, C.MNIST, calib, rounding="nearest")
+    acc_q = ptq.eval_q7(qm, tx, ty)
+    assert acc_f - acc_q < 0.03, (acc_f, acc_q)    # paper: 0.07-0.18 %
+
+
+def test_ptq_shift_consistency(trained_mnist):
+    """Alg. 6 invariants: out/bias shifts equal frac-bit differences."""
+    params, _ = trained_mnist
+    calib = jnp.asarray(make_image_dataset("mnist", 64, seed=1)[0])
+    qm = ptq.quantize_capsnet(params, C.MNIST, calib)
+    s = qm.shifts
+    assert s["conv0_out_shift"] == s["input_frac"] + s["conv0_w_frac"] \
+        - s["conv0_out_frac"]
+    assert s["uhat_shift"] == 7 + s["caps_W_frac"] - s["uhat_frac"]
+    for r in range(C.MNIST.routings):
+        assert s[f"caps_out_shift_{r}"] == s["uhat_frac"] + 7 \
+            - s[f"caps_out_frac_{r}"]
+
+
+def test_q7_forward_uses_only_int8_tensors(trained_mnist):
+    params, _ = trained_mnist
+    calib = jnp.asarray(make_image_dataset("mnist", 64, seed=1)[0])
+    qm = ptq.quantize_capsnet(params, C.MNIST, calib)
+    for leaf in jax.tree_util.tree_leaves(qm.weights):
+        assert leaf.dtype == jnp.int8
+    from repro.core.capsnet_q7 import qcapsnet_forward
+    x, _ = make_image_dataset("mnist", 4, seed=2)
+    xq = ptq.quantize_input(jnp.asarray(x), qm.shifts["input_frac"])
+    v = qcapsnet_forward(qm, xq)
+    assert v.dtype == jnp.int8
+    assert v.shape == (4, 10, 6)
