@@ -1,158 +1,52 @@
-"""CapsNet with dynamic routing — float reference (paper Table 1 configs).
+"""Float CapsNet — compatibility shim over the typed repro.nn pipeline.
 
-Geometry check against the paper (exact): with VALID padding,
-  MNIST    28x28x1: conv16 k7 s1 -> 22x22; pcap k7 s2 -> 8x8x(16x4)
-           -> 1024 input capsules  => caps layer 10x1024x6x4   (Table 7 "L")
-           => 297.1k params = 1187.20 KB fp32                  (Table 2)
-  smallNORB 32x32x2 (resized, as the paper's table sizes imply): conv32 k7
-           -> 26x26; pcap k7 s2 -> 10x10 -> 1600 caps => 5x1600x6x4 ("M")
-           => 295.6k params = 1182.34 KB fp32
-  CIFAR-10 32x32x3: convs 32,32,64,64 k3 s1,1,2,2 -> 6x6; pcap k3 s2 ->
-           2x2 -> 64 caps => 10x64x5x4 ("S") => 115.3k = 461.19 KB fp32
+The model itself (layers, geometry, calibration taps) lives in
+`repro.nn`; this module keeps the original function-style API — and the
+legacy trace-dict key names — for training code, tests and benchmarks.
+Config classes re-export from repro.nn.config (paper Table 1 geometries
+and the Table 2/7 footprint cross-checks are documented there).
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.routing import dynamic_routing, squash
+from repro.nn import compat
+from repro.nn.config import (CAPSNET_CONFIGS, CIFAR10,  # noqa: F401
+                             MNIST, SMALLNORB, CapsNetConfig)
+from repro.nn.pipeline import CapsPipeline
 
 
-@dataclasses.dataclass(frozen=True)
-class CapsNetConfig:
-    name: str
-    input_shape: tuple                     # (H, W, C)
-    conv_filters: tuple                    # e.g. (16,) or (32,32,64,64)
-    conv_kernels: tuple
-    conv_strides: tuple
-    pcap_caps: int = 16
-    pcap_dim: int = 4
-    pcap_kernel: int = 7
-    pcap_stride: int = 2
-    num_classes: int = 10
-    caps_dim: int = 6
-    routings: int = 3
-    lr: float = 1e-3
-
-    @property
-    def conv_out_hw(self) -> tuple:
-        h, w = self.input_shape[0], self.input_shape[1]
-        for k, s in zip(self.conv_kernels, self.conv_strides):
-            h = (h - k) // s + 1
-            w = (w - k) // s + 1
-        return h, w
-
-    @property
-    def pcap_out_hw(self) -> tuple:
-        h, w = self.conv_out_hw
-        k, s = self.pcap_kernel, self.pcap_stride
-        return (h - k) // s + 1, (w - k) // s + 1
-
-    @property
-    def num_input_caps(self) -> int:
-        h, w = self.pcap_out_hw
-        return h * w * self.pcap_caps
+@functools.lru_cache(maxsize=None)
+def pipeline(cfg: CapsNetConfig) -> CapsPipeline:
+    """The shared typed pipeline for a config (configs are frozen)."""
+    return CapsPipeline.from_config(cfg)
 
 
-MNIST = CapsNetConfig("capsnet_mnist", (28, 28, 1), (16,), (7,), (1,),
-                      num_classes=10, caps_dim=6, lr=1e-3)
-SMALLNORB = CapsNetConfig("capsnet_smallnorb", (32, 32, 2), (32,), (7,), (1,),
-                          num_classes=5, caps_dim=6, lr=2.5e-4)
-CIFAR10 = CapsNetConfig("capsnet_cifar10", (32, 32, 3), (32, 32, 64, 64),
-                        (3, 3, 3, 3), (1, 1, 2, 2), pcap_kernel=3,
-                        num_classes=10, caps_dim=5, lr=2.5e-4)
-CAPSNET_CONFIGS = {c.name: c for c in (MNIST, SMALLNORB, CIFAR10)}
-
-
-# ---------------------------------------------------------------------------
-# params
-# ---------------------------------------------------------------------------
 def init_capsnet(key, cfg: CapsNetConfig) -> dict:
-    params = {}
-    cin = cfg.input_shape[2]
-    ks = jax.random.split(key, len(cfg.conv_filters) + 2)
-    for i, (f, k, s) in enumerate(zip(cfg.conv_filters, cfg.conv_kernels,
-                                      cfg.conv_strides)):
-        fan_in = k * k * cin
-        params[f"conv{i}"] = {
-            "w": jax.random.normal(ks[i], (k, k, cin, f), jnp.float32)
-            * (2.0 / fan_in) ** 0.5,
-            "b": jnp.zeros((f,), jnp.float32),
-        }
-        cin = f
-    k_p = cfg.pcap_kernel
-    pout = cfg.pcap_caps * cfg.pcap_dim
-    fan_in = k_p * k_p * cin
-    params["pcap"] = {
-        "w": jax.random.normal(ks[-2], (k_p, k_p, cin, pout), jnp.float32)
-        * (1.0 / fan_in) ** 0.5,
-        "b": jnp.zeros((pout,), jnp.float32),
-    }
-    params["caps"] = {
-        "W": jax.random.normal(
-            ks[-1], (cfg.num_classes, cfg.num_input_caps, cfg.caps_dim,
-                     cfg.pcap_dim), jnp.float32) * 0.1,
-    }
-    return params
-
-
-# ---------------------------------------------------------------------------
-# forward
-# ---------------------------------------------------------------------------
-def _conv(x, p, stride):
-    y = jax.lax.conv_general_dilated(
-        x, p["w"], (stride, stride), "VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + p["b"]
-
-
-def primary_caps(params, x, cfg: CapsNetConfig):
-    """conv -> reshape [B, N_caps, dim] -> squash (paper §3.3)."""
-    y = _conv(x, params["pcap"], cfg.pcap_stride)
-    B = y.shape[0]
-    u = y.reshape(B, -1, cfg.pcap_dim)      # [B, h*w*caps, dim]
-    return squash(u, axis=-1)
+    return pipeline(cfg).init(key)
 
 
 def capsnet_forward(params, x, cfg: CapsNetConfig, *, with_trace=False):
     """x [B,H,W,C] float in [0,1] -> class capsule vectors [B, J, O].
 
-    with_trace: also return intermediate activations (for PTQ calibration).
+    with_trace: also return intermediate activations under the legacy
+    trace keys (use `pipeline(cfg).forward(..., with_taps=True)` for the
+    namespaced tap names).
     """
-    trace = {"input": x}
-    h = x
-    for i, s in enumerate(cfg.conv_strides):
-        h = _conv(h, params[f"conv{i}"], s)
-        trace[f"conv{i}_out"] = h
-        h = jax.nn.relu(h)
-    y = _conv(h, params["pcap"], cfg.pcap_stride)
-    trace["pcap_out"] = y
-    u = squash(y.reshape(y.shape[0], -1, cfg.pcap_dim), axis=-1)
-    trace["pcap_squashed"] = u
-
-    W = params["caps"]["W"]
-    u_hat = jnp.einsum("jiod,bid->bjio", W, u)
-    trace["u_hat"] = u_hat
-
-    # routing with per-iteration traces (PTQ needs per-iteration formats)
-    B, J, I, O = u_hat.shape
-    b = jnp.zeros((B, J, I), jnp.float32)
-    v = None
-    for r in range(cfg.routings):
-        c = jax.nn.softmax(b, axis=1)
-        s = jnp.einsum("bji,bjio->bjo", c, u_hat)
-        trace[f"s_iter{r}"] = s
-        v = squash(s, axis=-1)
-        if r < cfg.routings - 1:
-            a = jnp.einsum("bjio,bjo->bji", u_hat, v)
-            trace[f"agree_iter{r}"] = a
-            b = b + a
-            trace[f"logits_iter{r}"] = b
     if with_trace:
-        return v, trace
-    return v
+        v, taps = pipeline(cfg).forward(params, x, with_taps=True)
+        return v, compat.taps_to_trace(taps)
+    return pipeline(cfg).forward(params, x)
+
+
+def primary_caps(params, x, cfg: CapsNetConfig):
+    """conv -> reshape [B, N_caps, dim] -> squash (paper §3.3)."""
+    layer = pipeline(cfg).layer("pcap")
+    u, _ = layer.fwd_f32(params["pcap"], x)
+    return u
 
 
 def class_lengths(v):

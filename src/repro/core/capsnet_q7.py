@@ -1,11 +1,15 @@
-"""Quantized (int8) CapsNet inference pass — mirrors the paper's kernels.
+"""Quantized (int8) CapsNet inference — compatibility shim over repro.nn.
 
-The structure follows Alg. 5 exactly:
-  capsule_layer_q7 = calc_inputs_hat -> r x ( calc_coupling_coefs ->
-                     calc_caps_output -> calc_agreement_w_prev_caps )
-with int8 operands, int32 accumulators, power-of-two shifts.  All integer
-semantics come from repro.quant.int8_ops (the jnp oracles the Pallas
-kernels are validated against).
+The integer execution now lives in the typed layer API (`repro.nn`): each
+layer runs `fwd_q7(qweights, plan, x)` against a selectable op backend
+(the jnp oracle or the Pallas kernels).  This module keeps the paper-era
+surface — `QCapsNet` with its string-keyed shift table, `pcap_q7`,
+`capsule_layer_q7` (Alg. 5), `qcapsnet_forward` — translating the shift
+table into typed plans at the boundary.
+
+The softmax variant is a proper field now (`QCapsNet.softmax_impl`,
+carried into RoutingPlan.softmax_impl) — the old import-time monkey-patch
+of a `softmax` method onto the dataclass is gone.
 """
 from __future__ import annotations
 
@@ -14,20 +18,26 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.capsnet import CapsNetConfig
-from repro.quant import int8_ops as q
+from repro.core.capsnet import CapsNetConfig, pipeline
+from repro.nn import compat
 
 
 @dataclasses.dataclass
 class QCapsNet:
-    """Quantized model: int8 weights + the shift table from PTQ (Alg. 6)."""
+    """Quantized model: int8 weights + the shift table from PTQ (Alg. 6).
+
+    Legacy container — new code should hold a repro.nn QuantCapsNet.
+    """
     cfg: CapsNetConfig
     weights: dict          # int8 arrays (+ int bias)
     shifts: dict           # name -> int shift amounts / frac-bit counts
     rounding: str = "floor"   # paper/CMSIS semantics; "nearest" = option
+    softmax_impl: str = "q7"  # "q7" | "precise" (plan field, not a patch)
+    backend: str = "jnp"      # "jnp" oracle | "pallas" kernels
 
     def memory_bytes(self) -> int:
-        n = sum(l.size for l in jax.tree_util.tree_leaves(self.weights))
+        n = sum(l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(self.weights))
         n += 4 * len(jax.tree_util.tree_leaves(self.shifts))  # int32 shifts
         return int(n)
 
@@ -38,66 +48,29 @@ def pcap_q7(model: QCapsNet, x_q):
     The pcap_q7_basic/fast split of the paper is a Cortex-M register-
     blocking concern; on TPU both map to the same int8 conv.
     """
-    cfg, w, s = model.cfg, model.weights, model.shifts
-    y = q.conv2d_q7(x_q, w["pcap"]["w"], w["pcap"]["b"],
-                    s["pcap_out_shift"], s["pcap_bias_shift"],
-                    stride=cfg.pcap_stride, rounding=model.rounding)
-    u = y.reshape(y.shape[0], -1, cfg.pcap_dim)
-    return q.squash_q7(u, in_frac=s["pcap_out_frac"], out_frac=7)
+    layer = pipeline(model.cfg).layer("pcap")
+    plan = compat.pcap_plan_from_shifts(model.shifts)
+    return layer.fwd_q7(model.weights["pcap"], plan, x_q,
+                        backend=model.backend, rounding=model.rounding)
 
 
 def capsule_layer_q7(model: QCapsNet, u_q):
     """Alg. 5.  u_q int8 [B, I, D_in] (Q0.7 post-squash) -> v int8 [B,J,O]."""
-    cfg, w, s = model.cfg, model.weights, model.shifts
-    W = w["caps"]["W"]                                 # int8 [J, I, O, D]
-
-    # calc_inputs_hat: batched per-(j,i) matmul, int32 accum, one shift
-    acc = jnp.einsum("jiod,bid->bjio", W.astype(jnp.int32),
-                     u_q.astype(jnp.int32))
-    u_hat = q.rshift_sat8(acc, s["uhat_shift"], model.rounding)
-
-    B, J, I, O = u_hat.shape
-    b = jnp.zeros((B, J, I), jnp.int8)                 # logits (int8, paper)
-    v = None
-    for r in range(cfg.routings):
-        # calc_coupling_coefs: softmax over output capsules -> Q0.7
-        c = model.softmax(b.swapaxes(1, 2), in_frac=s["logit_frac"]) \
-            .swapaxes(1, 2)                             # softmax over J
-        # calc_caps_output: sum_i c_ij * u_hat  (int32 accum, shift, squash)
-        acc = jnp.einsum("bji,bjio->bjo", c.astype(jnp.int32),
-                         u_hat.astype(jnp.int32))
-        s_q = q.rshift_sat8(acc, s[f"caps_out_shift_{r}"], model.rounding)
-        v = q.squash_q7(s_q, in_frac=s[f"caps_out_frac_{r}"], out_frac=7)
-        if r < cfg.routings - 1:
-            # calc_agreement_w_prev_caps: <u_hat, v> then saturating add
-            acc = jnp.einsum("bjio,bjo->bji", u_hat.astype(jnp.int32),
-                             v.astype(jnp.int32))
-            a = q.rshift_sat8(acc, s[f"agree_shift_{r}"], model.rounding)
-            b = q.add_q7(b, a)                          # int8 saturating add
-    return v
-
-
-# bind softmax implementation onto the dataclass (configurable variant)
-def _softmax(self, x, in_frac):
-    if getattr(self, "softmax_impl", "q7") == "precise":
-        return q.softmax_q7_precise(x, in_frac)
-    return q.softmax_q7(x, in_frac)
-
-
-QCapsNet.softmax = _softmax
+    layer = pipeline(model.cfg).layer("caps")
+    plan = compat.routing_plan_from_shifts(
+        model.shifts, model.cfg.routings, model.softmax_impl)
+    return layer.fwd_q7(model.weights["caps"], plan, u_q,
+                        backend=model.backend, rounding=model.rounding)
 
 
 def qcapsnet_forward(model: QCapsNet, x_q):
     """Full quantized inference: x_q int8 image (Q0.7) -> v int8 [B,J,O]."""
-    cfg, w, s = model.cfg, model.weights, model.shifts
-    h = x_q
-    for i in range(len(cfg.conv_filters)):
-        h = q.conv2d_q7(h, w[f"conv{i}"]["w"], w[f"conv{i}"]["b"],
-                        s[f"conv{i}_out_shift"], s[f"conv{i}_bias_shift"],
-                        stride=cfg.conv_strides[i], rounding=model.rounding)
-        h = q.relu_q7(h)
-    u = pcap_q7(model, h)
-    return capsule_layer_q7(model, u)
+    pipe = pipeline(model.cfg)
+    plan = compat.shifts_to_plan(
+        model.shifts, len(model.cfg.conv_filters), model.cfg.routings,
+        model.softmax_impl)
+    return pipe.forward_q7(model.weights, plan, x_q,
+                           backend=model.backend, rounding=model.rounding)
 
 
 def qclass_lengths(model: QCapsNet, v_q):

@@ -1,0 +1,12 @@
+"""Distribution layer: mesh-aware sharding helpers, fault tolerance, and
+the trip-count-aware HLO cost model.
+
+Submodules:
+  api          — logical axis names (BATCH/SEQ), `shard` constraints, mesh
+                 introspection (`current_mesh`, `dp_size`, `fspec`).
+  sharding     — PartitionSpec rules for params / optimizer state /
+                 batches / decode caches, and NamedSharding conversion.
+  fault        — elastic mesh choice, crash-restart driver, step timing.
+  hlo_analysis — post-optimization HLO text cost model (flops, bytes,
+                 collectives) that multiplies while bodies by trip counts.
+"""

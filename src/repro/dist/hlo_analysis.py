@@ -1,0 +1,273 @@
+"""Trip-count-aware cost model over post-optimization HLO text.
+
+XLA's own `Compiled.cost_analysis()` counts each while body ONCE, but every
+layer loop in this codebase is a `jax.lax.scan` — so a 48-layer model would
+report 1/48th of its real flops.  This module re-derives per-device flops /
+memory traffic / collective bytes from `compiled.as_text()`, multiplying
+each while body by its trip count (nested loops multiply through).
+
+Trip counts come from the `known_trip_count` backend_config when XLA
+annotated it, else from the loop condition's `compare(iv, constant)`
+pattern; loops with dynamic bounds fall back to 1 (a documented
+underestimate, not a crash).
+
+Only dot and convolution contribute flops (elementwise traffic is covered
+by the byte terms — on the roofline it is bandwidth, not compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8,
+    "s64": 8, "u64": 8, "f64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+
+# collective ops (async "-done" halves are skipped; "-start" carries shape)
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operands/results are aliases or compile-time data: no traffic
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _shapes(type_str: str) -> list:
+    """All (dtype, dims tuple) array shapes mentioned in a type string."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        out.append((dtype, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    rest: str            # operand list + attributes (metadata stripped)
+
+    def attr_comp(self, key: str):
+        m = re.search(rf"{key}=%([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Per-device cost terms (trip-count-weighted)."""
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    collective_count_by_kind: dict = dataclasses.field(default_factory=dict)
+    n_whiles: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collective_bytes_by_kind.items():
+            self.collective_bytes_by_kind[k] = \
+                self.collective_bytes_by_kind.get(k, 0.0) + mult * v
+        for k, v in other.collective_count_by_kind.items():
+            self.collective_count_by_kind[k] = \
+                self.collective_count_by_kind.get(k, 0) + int(mult * v)
+        self.n_whiles += other.n_whiles
+
+
+def _parse_module(text: str):
+    """-> (comps: name -> [Instr], entry_name)."""
+    comps, entry, cur = {}, None, None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        # strip metadata/backend_config noise before shape scanning,
+        # keeping known_trip_count (consumed via the raw line below)
+        s = line.strip()
+        m = _INSTR_RE.match(s)
+        if m:
+            rest = m.group(4)
+            cut = rest.find(", metadata=")
+            core = rest if cut < 0 else rest[:cut]
+            trip = re.search(r'known_trip_count[^}]*?"n":"(\d+)"', rest)
+            if trip:
+                core += f', known_trip_count_n={trip.group(1)}'
+            comps[cur].append(Instr(m.group(1), m.group(3), m.group(2),
+                                    core))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _dot_flops(ins: Instr) -> float:
+    operands = _shapes(ins.rest.split(", lhs_contracting_dims")[0])
+    out = _shapes(ins.out_type)
+    if not operands or not out:
+        return 0.0
+    lhs = operands[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    cdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+    contract = _prod([lhs[d] for d in cdims if d < len(lhs)]) if cdims else 1
+    return 2.0 * _prod(out[0][1]) * contract
+
+
+def _conv_flops(ins: Instr) -> float:
+    operands = _shapes(ins.rest.split(", window=")[0])
+    out = _shapes(ins.out_type)
+    if len(operands) < 2 or not out:
+        return 0.0
+    rhs = operands[1][1]
+    out_dims = out[0][1]
+    cout = rhs[-1]
+    m = re.search(r"dim_labels=\w+_(\w+)->(\w+)", ins.rest)
+    if m:
+        rhs_labels, out_labels = m.group(1), m.group(2)
+        if "o" in rhs_labels and len(rhs_labels) == len(rhs):
+            cout = rhs[rhs_labels.index("o")]
+        elif "f" in out_labels and len(out_labels) == len(out_dims):
+            cout = out_dims[out_labels.index("f")]
+    return 2.0 * _prod(out_dims) * _prod(rhs) / max(cout, 1)
+
+
+def _trip_count(ins: Instr, comps: dict) -> int:
+    m = re.search(r"known_trip_count_n=(\d+)", ins.rest)
+    if m:
+        return int(m.group(1))
+    cond = ins.attr_comp("condition")
+    if cond and cond in comps:
+        # a constant's Instr.rest is what followed "constant(": "8)..."
+        consts = {i.name: int(v.group(1)) for i in comps[cond]
+                  if i.opcode == "constant"
+                  and (v := re.match(r"(-?\d+)\)", i.rest))}
+        for i in comps[cond]:
+            if i.opcode == "compare":
+                d = re.search(r"direction=(\w+)", i.rest)
+                ops = re.findall(r"%([\w\.\-]+)", i.rest.split(
+                    ", direction=")[0])
+                for o in ops:
+                    if o in consts:
+                        n = consts[o]
+                        return n + 1 if d and d.group(1) == "LE" else n
+    return 1
+
+
+def _instr_bytes(ins: Instr) -> float:
+    if ins.opcode in _FREE_OPS:
+        return 0.0
+    stop = ins.rest.find("), ")
+    operand_str = ins.rest if stop < 0 else ins.rest[:stop]
+    return _shape_bytes(ins.out_type) + _shape_bytes(operand_str)
+
+
+def _comp_cost(name: str, comps: dict, memo: dict) -> HloCost:
+    if name in memo:
+        return memo[name]
+    memo[name] = HloCost()          # cycle guard (HLO is acyclic anyway)
+    cost = HloCost()
+    for ins in comps.get(name, ()):
+        op = ins.opcode
+        if op == "while":
+            trip = _trip_count(ins, comps)
+            body = ins.attr_comp("body")
+            cond = ins.attr_comp("condition")
+            if body:
+                cost.add(_comp_cost(body, comps, memo), trip)
+            if cond:
+                cost.add(_comp_cost(cond, comps, memo), trip)
+            cost.n_whiles += 1
+        elif op == "fusion":
+            called = ins.attr_comp("calls")
+            if called:
+                inner = _comp_cost(called, comps, memo)
+                cost.flops += inner.flops          # inner bytes stay
+                cost.n_whiles += inner.n_whiles    # in registers/VMEM
+            cost.hbm_bytes += _instr_bytes(ins)
+        elif op in ("call", "async-start"):
+            called = ins.attr_comp("to_apply") or ins.attr_comp("calls")
+            if called:
+                cost.add(_comp_cost(called, comps, memo))
+        elif op == "conditional":
+            branches = re.findall(r"%([\w\.\-]+)", ins.rest)
+            sub = [_comp_cost(b, comps, memo) for b in branches
+                   if b in comps]
+            if sub:
+                cost.add(max(sub, key=lambda c: c.flops))
+        elif op == "dot":
+            cost.flops += _dot_flops(ins)
+            cost.hbm_bytes += _instr_bytes(ins)
+        elif op == "convolution":
+            cost.flops += _conv_flops(ins)
+            cost.hbm_bytes += _instr_bytes(ins)
+        elif any(op == c or op == c + "-start" for c in _COLLECTIVES):
+            kind = op[:-6] if op.endswith("-start") else op
+            nbytes = _shape_bytes(ins.out_type)
+            cost.collective_bytes += nbytes
+            cost.collective_bytes_by_kind[kind] = \
+                cost.collective_bytes_by_kind.get(kind, 0.0) + nbytes
+            cost.collective_count_by_kind[kind] = \
+                cost.collective_count_by_kind.get(kind, 0) + 1
+            cost.hbm_bytes += _instr_bytes(ins)
+        else:
+            if op.endswith("-done"):
+                continue
+            sub = ins.attr_comp("to_apply")     # reduce / scatter / sort
+            if sub:
+                cost.add(_comp_cost(sub, comps, memo))
+            cost.hbm_bytes += _instr_bytes(ins)
+    memo[name] = cost
+    return cost
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    """Cost of one execution of the ENTRY computation (per device for an
+    SPMD-partitioned module, whole program otherwise)."""
+    comps, entry = _parse_module(hlo_text)
+    if entry is None:
+        return HloCost()
+    return _comp_cost(entry, comps, {})
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    """Collective traffic summary of a compiled module's HLO text."""
+    cost = analyze_hlo(hlo_text)
+    return {
+        "total_bytes": cost.collective_bytes,
+        "bytes_by_kind": cost.collective_bytes_by_kind,
+        "count_by_kind": cost.collective_count_by_kind,
+    }

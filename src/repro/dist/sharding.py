@@ -1,0 +1,82 @@
+"""PartitionSpec rules for every tree the launch layer ships to devices.
+
+Policy (GSPMD does the rest):
+  params     — tensor parallel: the trailing (output-feature) axis of
+               every >=2D weight shards over "model"; vectors replicate.
+  opt state  — moment trees mirror the param rule; scalars replicate.
+  batches    — leading axis over the BATCH (pod x data) axes when the
+               global batch divides the DP ways, else replicated.
+  caches     — mirrors models.attention._decode_seq_axes: batch over DP
+               plus seq over "model" when the batch shards, otherwise seq
+               over ("data", "model").
+Every spec goes through `api.fspec` at conversion time, so the same rules
+serve 2-axis and 3-axis meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.api import BATCH, dp_size, fspec
+
+
+def _leaf_spec(leaf) -> P:
+    if len(leaf.shape) >= 2 and leaf.shape[-1] > 1:
+        return P(*([None] * (len(leaf.shape) - 1) + ["model"]))
+    return P()
+
+
+def param_specs(tree):
+    """One PartitionSpec per parameter leaf (ndim-matched, see policy)."""
+    return jax.tree.map(_leaf_spec, tree)
+
+
+def opt_state_specs(opt_state, params):
+    """Specs for an optimizer-state dict: entries shaped like the param
+    tree (m/v moments) inherit param specs; everything else replicates."""
+    ptree = jax.tree_util.tree_structure(params)
+
+    def per_entry(sub):
+        if jax.tree_util.tree_structure(sub) == ptree:
+            return param_specs(sub)
+        return jax.tree.map(lambda _: P(), sub)
+
+    return {k: per_entry(v) for k, v in opt_state.items()}
+
+
+def batch_specs(batch, global_batch: int, mesh):
+    """Shard the leading axis of every batch leaf over DP when it divides."""
+    dp = dp_size(mesh)
+    shardable = dp > 1 and global_batch % dp == 0 and global_batch >= dp
+
+    def spec(leaf):
+        if shardable and len(leaf.shape) >= 1 \
+                and leaf.shape[0] == global_batch:
+            return P(*([BATCH] + [None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache, global_batch: int, mesh, stacked: bool = True):
+    """Decode-cache specs (stacked caches carry a leading layer axis)."""
+    dp = dp_size(mesh)
+    shardable = dp > 1 and global_batch % dp == 0 and global_batch >= dp
+    off = 1 if stacked else 0
+    b_ax, s_ax = (BATCH, "model") if shardable else (None, ("data", "model"))
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd < off + 2:
+            return P()
+        ent = [None] * nd
+        ent[off] = b_ax
+        ent[off + 1] = s_ax
+        return P(*ent)
+
+    return jax.tree.map(spec, cache)
+
+
+def to_shardings(spec: P, mesh) -> NamedSharding:
+    """PartitionSpec -> NamedSharding, filtering axes the mesh lacks."""
+    return NamedSharding(mesh, fspec(mesh, *spec))

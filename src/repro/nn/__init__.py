@@ -1,0 +1,11 @@
+"""Typed capsule-layer API: one pipeline for float forward, PTQ
+calibration, and int8 inference.  See README.md in this package."""
+from repro.nn.backend import (BACKENDS, JnpBackend,  # noqa: F401
+                              PallasBackend, get_backend)
+from repro.nn.config import (CAPSNET_CONFIGS, CIFAR10,  # noqa: F401
+                             MNIST, SMALLNORB, CapsNetConfig)
+from repro.nn.layers import (CapsLayer, CapsuleRouting,  # noqa: F401
+                             PrimaryCaps, QuantConv2D)
+from repro.nn.pipeline import CapsPipeline, QuantCapsNet  # noqa: F401
+from repro.nn.plans import (ConvPlan, PipelinePlan,  # noqa: F401
+                            PrimaryCapsPlan, RoutingPlan, TapStats)

@@ -1,0 +1,101 @@
+"""Selectable int8 op backends for the quantized execution path.
+
+`jnp`    — the pure-jnp oracle semantics from repro.quant.int8_ops: the
+           bit-exact reference every other backend must reproduce.
+`pallas` — the TPU kernels from repro.kernels: Pallas squash and the
+           FUSED routing kernel (u_hat resident in VMEM, DESIGN §7).
+           Falls back to the oracle loop for the "precise" softmax
+           variant, which the fused kernel does not implement.
+
+Both backends are bit-identical on the default ("q7") plan — the fused
+kernel is a perf change, not a semantics change (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant import int8_ops as q
+
+
+class JnpBackend:
+    """Oracle backend: exact paper/CMSIS integer semantics in plain jnp."""
+
+    name = "jnp"
+
+    def conv2d_q7(self, x, w, b, out_shift, bias_shift, *, stride, rounding):
+        return q.conv2d_q7(x, w, b, out_shift, bias_shift,
+                           stride=stride, rounding=rounding)
+
+    def relu_q7(self, x):
+        return q.relu_q7(x)
+
+    def squash_q7(self, s, *, in_frac, out_frac=7):
+        return q.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
+
+    def softmax_q7(self, x, *, in_frac, impl="q7"):
+        if impl == "precise":
+            return q.softmax_q7_precise(x, in_frac)
+        return q.softmax_q7(x, in_frac)
+
+    def uhat_q7(self, W, u, *, shift, rounding):
+        """calc_inputs_hat: W int8 [J,I,O,D] x u int8 [B,I,D] -> int8
+        u_hat [B,J,I,O] (int32 accumulation, one shift)."""
+        acc = jnp.einsum("jiod,bid->bjio", W.astype(jnp.int32),
+                         u.astype(jnp.int32))
+        return q.rshift_sat8(acc, shift, rounding)
+
+    def routing_q7(self, u_hat, plan, *, rounding):
+        """Alg. 5's r-iteration loop over an already-computed u_hat."""
+        b = jnp.zeros(u_hat.shape[:3], jnp.int8)
+        v = None
+        for r in range(plan.routings):
+            c = self.softmax_q7(b.swapaxes(1, 2), in_frac=plan.logit_frac,
+                                impl=plan.softmax_impl).swapaxes(1, 2)
+            acc = jnp.einsum("bji,bjio->bjo", c.astype(jnp.int32),
+                             u_hat.astype(jnp.int32))
+            s_q = q.rshift_sat8(acc, plan.caps_out_shifts[r], rounding)
+            v = self.squash_q7(s_q, in_frac=plan.caps_out_fracs[r],
+                               out_frac=plan.out_frac)
+            if r < plan.routings - 1:
+                acc = jnp.einsum("bjio,bjo->bji", u_hat.astype(jnp.int32),
+                                 v.astype(jnp.int32))
+                a = q.rshift_sat8(acc, plan.agree_shifts[r], rounding)
+                b = q.add_q7(b, a)
+        return v
+
+
+class PallasBackend(JnpBackend):
+    """TPU-kernel backend (interpret mode on CPU): Pallas squash + the
+    fused routing kernel.  Convs stay on the XLA int8 conv (the MXU path
+    the paper's pcap maps to; there is no bespoke conv kernel)."""
+
+    name = "pallas"
+
+    def squash_q7(self, s, *, in_frac, out_frac=7):
+        from repro.kernels import ops as kops
+        return kops.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
+
+    def routing_q7(self, u_hat, plan, *, rounding):
+        if plan.softmax_impl != "q7":
+            return super().routing_q7(u_hat, plan, rounding=rounding)
+        from repro.kernels import ops as kops
+        return kops.routing_q7(
+            u_hat, num_iters=plan.routings,
+            caps_out_shifts=plan.caps_out_shifts,
+            caps_out_fracs=plan.caps_out_fracs,
+            agree_shifts=plan.agree_shifts,
+            logit_frac=plan.logit_frac, rounding=rounding)
+
+
+BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
+
+
+def get_backend(backend):
+    """Resolve a backend name (or pass an OpBackend-shaped object through)."""
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
+    return backend

@@ -1,0 +1,135 @@
+"""Translation between the typed plans/taps and the legacy string-keyed
+shift table / trace dict.
+
+This is the ONLY place the old magic keys ("conv{i}_out_shift",
+"caps_out_shift_{r}", "agree_shift_{r}", ...) exist outside the thin
+compatibility shims in core/capsnet*.py and quant/ptq.py.  Everything
+here is a pure renaming: the numbers are the plans' own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.nn.plans import (ConvPlan, PipelinePlan, PrimaryCapsPlan,
+                            RoutingPlan)
+
+# tap name -> legacy trace key (and the reverse renames, for stats)
+_TAP_RULES = (
+    (re.compile(r"^input$"), lambda m: "input"),
+    (re.compile(r"^(conv\d+)\.out$"), lambda m: f"{m.group(1)}_out"),
+    (re.compile(r"^pcap\.out$"), lambda m: "pcap_out"),
+    (re.compile(r"^pcap\.squashed$"), lambda m: "pcap_squashed"),
+    (re.compile(r"^caps\.u_hat$"), lambda m: "u_hat"),
+    (re.compile(r"^caps\.s/(\d+)$"), lambda m: f"s_iter{m.group(1)}"),
+    (re.compile(r"^caps\.agree/(\d+)$"),
+     lambda m: f"agree_iter{m.group(1)}"),
+    (re.compile(r"^caps\.logits/(\d+)$"),
+     lambda m: f"logits_iter{m.group(1)}"),
+)
+
+
+def tap_to_trace_key(name: str) -> str:
+    for rx, fmt in _TAP_RULES:
+        m = rx.match(name)
+        if m:
+            return fmt(m)
+    return name.replace(".", "_").replace("/", "_")
+
+
+def taps_to_trace(taps: dict) -> dict:
+    """Namespaced tap dict -> the legacy with_trace trace dict."""
+    return {tap_to_trace_key(k): v for k, v in taps.items()}
+
+
+# ---------------------------------------------------------------------------
+# plans -> legacy shift table
+# ---------------------------------------------------------------------------
+def plan_to_shifts(plan: PipelinePlan) -> dict:
+    """Flatten a PipelinePlan into the exact legacy shift-table keys."""
+    shifts: dict = {"input_frac": plan.input_frac}
+    for name, p in plan.layers.items():
+        if isinstance(p, ConvPlan):
+            shifts[f"{name}_w_frac"] = p.w_frac
+            shifts[f"{name}_out_frac"] = p.out_frac
+            shifts[f"{name}_out_shift"] = p.out_shift
+            shifts[f"{name}_bias_shift"] = p.bias_shift
+        elif isinstance(p, PrimaryCapsPlan):
+            shifts[f"{name}_w_frac"] = p.conv.w_frac
+            shifts[f"{name}_out_frac"] = p.conv.out_frac
+            shifts[f"{name}_out_shift"] = p.conv.out_shift
+            shifts[f"{name}_bias_shift"] = p.conv.bias_shift
+        elif isinstance(p, RoutingPlan):
+            if "uhat_shift" in shifts:
+                raise ValueError(
+                    "the legacy shift table holds exactly one routing "
+                    "layer; use the typed PipelinePlan for deeper stacks")
+            # the legacy table knows exactly one routing layer, under
+            # fixed keys — "caps_W_frac" regardless of the layer's name
+            shifts["caps_W_frac"] = p.W_frac
+            shifts["uhat_frac"] = p.uhat_frac
+            shifts["uhat_shift"] = p.uhat_shift
+            shifts["logit_frac"] = p.logit_frac
+            for r in range(p.routings):
+                shifts[f"caps_out_frac_{r}"] = p.caps_out_fracs[r]
+                shifts[f"caps_out_shift_{r}"] = p.caps_out_shifts[r]
+            for r, s in enumerate(p.agree_shifts):
+                shifts[f"agree_shift_{r}"] = s
+        else:
+            raise TypeError(f"unknown plan type for layer {name}: {p!r}")
+    return shifts
+
+
+# ---------------------------------------------------------------------------
+# legacy shift table -> plans (partial tables allowed, per shim)
+# ---------------------------------------------------------------------------
+def conv_plan_from_shifts(shifts: dict, name: str) -> ConvPlan:
+    return ConvPlan(
+        in_frac=shifts.get("input_frac", 7),
+        w_frac=shifts.get(f"{name}_w_frac", 0),
+        b_frac=0,
+        out_frac=shifts.get(f"{name}_out_frac", 7),
+        out_shift=shifts[f"{name}_out_shift"],
+        bias_shift=shifts[f"{name}_bias_shift"])
+
+
+def pcap_plan_from_shifts(shifts: dict) -> PrimaryCapsPlan:
+    return PrimaryCapsPlan(conv=ConvPlan(
+        in_frac=0, w_frac=shifts.get("pcap_w_frac", 0), b_frac=0,
+        out_frac=shifts["pcap_out_frac"],
+        out_shift=shifts["pcap_out_shift"],
+        bias_shift=shifts["pcap_bias_shift"]))
+
+
+def routing_plan_from_shifts(shifts: dict, routings: int,
+                             softmax_impl: str = "q7") -> RoutingPlan:
+    return RoutingPlan(
+        uhat_shift=shifts["uhat_shift"],
+        logit_frac=shifts["logit_frac"],
+        caps_out_shifts=tuple(shifts[f"caps_out_shift_{r}"]
+                              for r in range(routings)),
+        caps_out_fracs=tuple(shifts[f"caps_out_frac_{r}"]
+                             for r in range(routings)),
+        agree_shifts=tuple(shifts[f"agree_shift_{r}"]
+                           for r in range(routings - 1)),
+        softmax_impl=softmax_impl,
+        W_frac=shifts.get("caps_W_frac", 0),
+        uhat_frac=shifts.get("uhat_frac", 0))
+
+
+def shifts_to_plan(shifts: dict, num_convs: int, routings: int,
+                   softmax_impl: str = "q7") -> PipelinePlan:
+    """Full legacy shift table -> PipelinePlan (for the forward shim)."""
+    layers: dict = {}
+    f_act = shifts.get("input_frac", 7)   # execution never reads in_frac
+    for i in range(num_convs):
+        p = conv_plan_from_shifts(shifts, f"conv{i}")
+        layers[f"conv{i}"] = dataclasses.replace(p, in_frac=f_act)
+        f_act = p.out_frac
+    pc = pcap_plan_from_shifts(shifts)
+    layers["pcap"] = dataclasses.replace(
+        pc, conv=dataclasses.replace(pc.conv, in_frac=f_act))
+    layers["caps"] = routing_plan_from_shifts(shifts, routings,
+                                              softmax_impl)
+    return PipelinePlan(input_frac=shifts.get("input_frac", 7),
+                        layers=layers)

@@ -1,0 +1,229 @@
+"""Capsule-network layers implementing the three-face protocol.
+
+Every layer is a small frozen object with one protocol (`CapsLayer`):
+
+  fwd_f32(params, x)            -> (y, taps)   float forward; `taps` are
+                                   the layer's OWN named calibration
+                                   points (no global trace dict).
+  plan(params, stats, in_frac)  -> LayerQuantPlan   derive the layer's
+                                   Qm.n formats and shifts (Alg. 6/7).
+  quantize(params, plan)        -> int8 weight dict (Alg. 7).
+  fwd_q7(qweights, plan, x, *, backend, rounding) -> y   int8 execution
+                                   on a selectable op backend.
+
+`plan_tap_names()` declares exactly which stats keys `plan` reads, so the
+pipeline can verify calibration completeness instead of KeyError-ing deep
+inside a walk.  int8 shapes come from the data, never the config, so the
+same layer objects serve ad-hoc geometries (benchmarks, kernel tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import squash
+from repro.nn.backend import get_backend
+from repro.nn.plans import ConvPlan, PrimaryCapsPlan, RoutingPlan, TapStats
+from repro.quant import qformat as qf
+
+
+@runtime_checkable
+class CapsLayer(Protocol):
+    name: str
+
+    def init(self, key) -> dict: ...
+    def fwd_f32(self, params, x) -> tuple: ...
+    def plan_tap_names(self) -> tuple: ...
+    def plan(self, params, stats: TapStats, in_frac: int): ...
+    def quantize(self, params, plan) -> dict: ...
+    def fwd_q7(self, qweights, plan, x, *, backend="jnp",
+               rounding="floor"): ...
+
+
+def _conv(x, w, b, stride: int):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _weight_frac(w) -> int:
+    return qf.frac_bits(float(jnp.max(jnp.abs(w))))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConv2D:
+    """VALID-padded NHWC conv + bias (+ optional relu), int8 via one
+    accumulator shift.  Taps: "out" (pre-activation)."""
+    name: str
+    kernel: int
+    stride: int
+    in_ch: int
+    out_ch: int
+    relu: bool = True
+    init_scale_pow: float = 2.0     # he-normal: sqrt(init_scale_pow/fan_in)
+
+    def init(self, key) -> dict:
+        k, fan_in = self.kernel, self.kernel * self.kernel * self.in_ch
+        return {
+            "w": jax.random.normal(key, (k, k, self.in_ch, self.out_ch),
+                                   jnp.float32)
+            * (self.init_scale_pow / fan_in) ** 0.5,
+            "b": jnp.zeros((self.out_ch,), jnp.float32),
+        }
+
+    def fwd_f32(self, params, x):
+        y = _conv(x, params["w"], params["b"], self.stride)
+        taps = {"out": y}
+        return (jax.nn.relu(y) if self.relu else y), taps
+
+    def plan_tap_names(self) -> tuple:
+        return (f"{self.name}.out",)
+
+    def plan(self, params, stats: TapStats, in_frac: int) -> ConvPlan:
+        f_w = _weight_frac(params["w"])
+        f_b = _weight_frac(params["b"]) if params["b"].size else f_w
+        f_out = qf.frac_bits(stats[f"{self.name}.out"])
+        return ConvPlan(
+            in_frac=in_frac, w_frac=f_w, b_frac=f_b, out_frac=f_out,
+            out_shift=qf.out_shift(in_frac, f_w, f_out),
+            bias_shift=qf.bias_shift(in_frac, f_w, f_b))
+
+    def quantize(self, params, plan: ConvPlan) -> dict:
+        return {"w": qf.quantize(params["w"], plan.w_frac),
+                "b": qf.quantize(params["b"], plan.b_frac)}
+
+    def fwd_q7(self, qweights, plan: ConvPlan, x, *, backend="jnp",
+               rounding="floor"):
+        be = get_backend(backend)
+        y = be.conv2d_q7(x, qweights["w"], qweights["b"], plan.out_shift,
+                         plan.bias_shift, stride=self.stride,
+                         rounding=rounding)
+        return be.relu_q7(y) if self.relu else y
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimaryCaps:
+    """Primary capsules (paper §3.3): conv -> reshape [B, N_caps, dim] ->
+    squash into Q0.7.  Taps: "out" (conv pre-squash), "squashed".
+
+    The conv faces delegate to an inner QuantConv2D (no relu, 1/fan_in
+    init); this layer adds only the reshape + integer squash."""
+    name: str
+    kernel: int
+    stride: int
+    in_ch: int
+    caps: int
+    dim: int
+
+    @property
+    def out_ch(self) -> int:
+        return self.caps * self.dim
+
+    @property
+    def conv(self) -> QuantConv2D:
+        return QuantConv2D(self.name, self.kernel, self.stride, self.in_ch,
+                           self.out_ch, relu=False, init_scale_pow=1.0)
+
+    def init(self, key) -> dict:
+        return self.conv.init(key)
+
+    def fwd_f32(self, params, x):
+        y, taps = self.conv.fwd_f32(params, x)
+        u = squash(y.reshape(y.shape[0], -1, self.dim), axis=-1)
+        return u, {**taps, "squashed": u}
+
+    def plan_tap_names(self) -> tuple:
+        return self.conv.plan_tap_names()
+
+    def plan(self, params, stats: TapStats, in_frac: int) -> PrimaryCapsPlan:
+        return PrimaryCapsPlan(conv=self.conv.plan(params, stats, in_frac))
+
+    def quantize(self, params, plan: PrimaryCapsPlan) -> dict:
+        return self.conv.quantize(params, plan.conv)
+
+    def fwd_q7(self, qweights, plan: PrimaryCapsPlan, x, *, backend="jnp",
+               rounding="floor"):
+        y = self.conv.fwd_q7(qweights, plan.conv, x, backend=backend,
+                             rounding=rounding)
+        u = y.reshape(y.shape[0], -1, self.dim)
+        return get_backend(backend).squash_q7(
+            u, in_frac=plan.conv.out_frac, out_frac=plan.squash_out_frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsuleRouting:
+    """Class capsules with dynamic routing (Alg. 5).  Taps: "u_hat",
+    per-iteration "s/{r}", "agree/{r}", "logits/{r}"."""
+    name: str
+    num_out: int                    # J (classes)
+    num_in: int                     # I (input capsules)
+    out_dim: int                    # O
+    in_dim: int                     # D
+    routings: int = 3
+    softmax_impl: str = "q7"        # default carried into the plan
+
+    def init(self, key) -> dict:
+        return {"W": jax.random.normal(
+            key, (self.num_out, self.num_in, self.out_dim, self.in_dim),
+            jnp.float32) * 0.1}
+
+    def fwd_f32(self, params, u):
+        W = params["W"]
+        u_hat = jnp.einsum("jiod,bid->bjio", W, u)
+        taps = {"u_hat": u_hat}
+        b = jnp.zeros(u_hat.shape[:3], jnp.float32)
+        v = None
+        for r in range(self.routings):
+            c = jax.nn.softmax(b, axis=1)
+            s = jnp.einsum("bji,bjio->bjo", c, u_hat)
+            taps[f"s/{r}"] = s
+            v = squash(s, axis=-1)
+            if r < self.routings - 1:
+                a = jnp.einsum("bjio,bjo->bji", u_hat, v)
+                taps[f"agree/{r}"] = a
+                b = b + a
+                taps[f"logits/{r}"] = b
+        return v, taps
+
+    def plan_tap_names(self) -> tuple:
+        names = [f"{self.name}.u_hat"]
+        names += [f"{self.name}.s/{r}" for r in range(self.routings)]
+        names += [f"{self.name}.logits/{r}"
+                  for r in range(self.routings - 1)]
+        return tuple(names)
+
+    def plan(self, params, stats: TapStats, in_frac: int) -> RoutingPlan:
+        fb = qf.frac_bits
+        f_W = _weight_frac(params["W"])
+        f_uhat = fb(stats[f"{self.name}.u_hat"])
+        # logit format is shared across iterations (b accumulates
+        # agreements), capped at the Q0.7 barrier
+        max_logit = max([stats.get(f"{self.name}.logits/{r}")
+                         for r in range(self.routings - 1)] + [1e-6])
+        f_logit = min(fb(max_logit), 7)
+        f_s = tuple(fb(stats[f"{self.name}.s/{r}"])
+                    for r in range(self.routings))
+        return RoutingPlan(
+            uhat_shift=qf.out_shift(in_frac, f_W, f_uhat),
+            logit_frac=f_logit,
+            caps_out_shifts=tuple(qf.out_shift(f_uhat, 7, f)
+                                  for f in f_s),
+            caps_out_fracs=f_s,
+            agree_shifts=tuple(qf.out_shift(f_uhat, 7, f_logit)
+                               for _ in range(self.routings - 1)),
+            softmax_impl=self.softmax_impl,
+            in_frac=in_frac, W_frac=f_W, uhat_frac=f_uhat)
+
+    def quantize(self, params, plan: RoutingPlan) -> dict:
+        return {"W": qf.quantize(params["W"], plan.W_frac)}
+
+    def fwd_q7(self, qweights, plan: RoutingPlan, u, *, backend="jnp",
+               rounding="floor"):
+        be = get_backend(backend)
+        u_hat = be.uhat_q7(qweights["W"], u, shift=plan.uhat_shift,
+                           rounding=rounding)
+        return be.routing_q7(u_hat, plan, rounding=rounding)

@@ -1,0 +1,176 @@
+"""CapsPipeline: one typed graph walk for all three execution faces.
+
+  forward    — float inference (optionally returning calibration taps)
+  calibrate  — max|x| per tap over a reference dataset (Alg. 6 line 8)
+  quantize   — per-layer plans + int8 weights -> a QuantCapsNet
+  forward_q7 — int8 inference on a selectable op backend
+
+The pipeline owns nothing numeric: every operation, tap, format and shift
+belongs to a layer.  Adding a layer kind (deeper stacks, approximate-op
+variants, per-channel PTQ) means writing one class against the CapsLayer
+protocol — no cross-file string threading.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import CapsNetConfig
+from repro.nn.layers import CapsuleRouting, PrimaryCaps, QuantConv2D
+from repro.nn.plans import PipelinePlan, TapStats, plan_scalars
+from repro.quant import qformat as qf
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsPipeline:
+    cfg: CapsNetConfig
+    layers: tuple
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg: CapsNetConfig,
+                    softmax_impl: str = "q7") -> "CapsPipeline":
+        layers = []
+        cin = cfg.input_shape[2]
+        for i, (f, k, s) in enumerate(zip(cfg.conv_filters, cfg.conv_kernels,
+                                          cfg.conv_strides)):
+            layers.append(QuantConv2D(f"conv{i}", k, s, cin, f, relu=True))
+            cin = f
+        layers.append(PrimaryCaps("pcap", cfg.pcap_kernel, cfg.pcap_stride,
+                                  cin, cfg.pcap_caps, cfg.pcap_dim))
+        layers.append(CapsuleRouting(
+            "caps", cfg.num_classes, cfg.num_input_caps, cfg.caps_dim,
+            cfg.pcap_dim, cfg.routings, softmax_impl=softmax_impl))
+        return cls(cfg=cfg, layers=tuple(layers))
+
+    def layer(self, name: str):
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def init(self, key) -> dict:
+        ks = jax.random.split(key, len(self.layers))
+        return {l.name: l.init(k) for l, k in zip(self.layers, ks)}
+
+    # ------------------------------------------------------------------
+    # float face
+    # ------------------------------------------------------------------
+    def forward(self, params, x, *, with_taps: bool = False):
+        """x [B,H,W,C] float in [0,1] -> class capsules [B, J, O]."""
+        taps = {"input": x}
+        h = x
+        for l in self.layers:
+            h, t = l.fwd_f32(params[l.name], h)
+            for k, v in t.items():
+                taps[f"{l.name}.{k}"] = v
+        return (h, taps) if with_taps else h
+
+    def tap_names(self) -> tuple:
+        """Every stats key any layer's plan() will read."""
+        names = ["input"]
+        for l in self.layers:
+            names.extend(l.plan_tap_names())
+        return tuple(names)
+
+    # ------------------------------------------------------------------
+    # calibration face (Alg. 6 line 8)
+    # ------------------------------------------------------------------
+    def calibrate(self, params, calib_images, batch: int = 64) -> TapStats:
+        fwd = jax.jit(
+            lambda x: self.forward(params, x, with_taps=True)[1])
+        maxes: dict = {}
+        n = calib_images.shape[0]
+        for i in range(0, n, batch):
+            taps = fwd(calib_images[i:i + batch])
+            for k, t in taps.items():
+                m = float(jnp.max(jnp.abs(t)))
+                maxes[k] = max(maxes.get(k, 0.0), m)
+        return TapStats(maxes)
+
+    # ------------------------------------------------------------------
+    # planning + quantization face (Alg. 6 & 7)
+    # ------------------------------------------------------------------
+    def plan(self, params, stats: TapStats) -> PipelinePlan:
+        """Each layer derives its own plan; the activation format chains
+        through `out_frac` -> next layer's `in_frac`."""
+        input_frac = qf.frac_bits(stats["input"])
+        f_act = input_frac
+        plans: dict = {}
+        for l in self.layers:
+            p = l.plan(params[l.name], stats, f_act)
+            plans[l.name] = p
+            f_act = p.out_frac
+        return PipelinePlan(input_frac=input_frac, layers=plans)
+
+    def quantize(self, params, calib_images, *, rounding: str = "floor",
+                 backend: str = "jnp", batch: int = 64) -> "QuantCapsNet":
+        stats = self.calibrate(params, calib_images, batch=batch)
+        plan = self.plan(params, stats)
+        qweights = {l.name: l.quantize(params[l.name], plan[l.name])
+                    for l in self.layers}
+        return QuantCapsNet(pipeline=self, plan=plan, qweights=qweights,
+                            rounding=rounding, backend=backend)
+
+    # ------------------------------------------------------------------
+    # int8 face
+    # ------------------------------------------------------------------
+    def forward_q7(self, qweights, plan: PipelinePlan, x_q, *,
+                   backend: str = "jnp", rounding: str = "floor"):
+        """x_q int8 image in the plan's input format -> v int8 [B,J,O]."""
+        h = x_q
+        for l in self.layers:
+            h = l.fwd_q7(qweights[l.name], plan[l.name], h,
+                         backend=backend, rounding=rounding)
+        return h
+
+    def quantize_input(self, x, plan: PipelinePlan):
+        return qf.quantize(x, plan.input_frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCapsNet:
+    """A quantized CapsNet as a typed object: pipeline + plan + int8
+    weights (the replacement for QCapsNet's string-keyed shift table)."""
+    pipeline: CapsPipeline
+    plan: PipelinePlan
+    qweights: dict
+    rounding: str = "floor"
+    backend: str = "jnp"
+
+    def quantize_input(self, x):
+        return self.pipeline.quantize_input(x, self.plan)
+
+    def forward(self, x_q):
+        return self.pipeline.forward_q7(self.qweights, self.plan, x_q,
+                                        backend=self.backend,
+                                        rounding=self.rounding)
+
+    def class_lengths(self, v_q):
+        v32 = v_q.astype(jnp.int32)
+        return jnp.sqrt(jnp.sum(v32 * v32, axis=-1)
+                        .astype(jnp.float32)) / 128.0
+
+    def memory_bytes(self) -> int:
+        n = sum(l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(self.qweights))
+        n += 4 * plan_scalars(self.plan)       # int32 shift/format table
+        return int(n)
+
+    def with_backend(self, backend: str) -> "QuantCapsNet":
+        return dataclasses.replace(self, backend=backend)
+
+    def with_softmax(self, impl: str) -> "QuantCapsNet":
+        """Return a model whose routing layers use `impl` softmax — a plan
+        edit, not a method patch.  Applies to every RoutingPlan in the
+        pipeline (deeper stacks may have several)."""
+        from repro.nn.plans import RoutingPlan
+        layers = {name: dataclasses.replace(p, softmax_impl=impl)
+                  if isinstance(p, RoutingPlan) else p
+                  for name, p in self.plan.layers.items()}
+        return dataclasses.replace(
+            self, plan=dataclasses.replace(self.plan, layers=layers))

@@ -1,0 +1,104 @@
+"""Typed quantization plans — the per-layer replacement for the old
+string-keyed shift table.
+
+A plan is everything a layer needs to execute its int8 path: Qm.n formats
+for its weights and activations plus the power-of-two shifts between them
+(paper Alg. 6).  Each layer derives its own plan from its calibration taps
+(`layer.plan(params, stats, in_frac)`), and the pipeline threads the
+activation format from one plan's `out_frac` into the next layer's
+`in_frac` — the contract the old design encoded as ~25 magic dict keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TapStats:
+    """max|x| observed on the calibration set, per tap name.
+
+    Tap names are `<layer>.<tap>` (e.g. "conv0.out", "caps.s/1") plus the
+    pipeline-level "input"."""
+    max_abs: dict
+
+    def __getitem__(self, name: str) -> float:
+        return self.max_abs[name]
+
+    def get(self, name: str, default: float = 0.0) -> float:
+        return self.max_abs.get(name, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """int8 conv: out_shift rescales the int32 accumulator into the
+    output format; bias_shift aligns the bias into the accumulator."""
+    in_frac: int
+    w_frac: int
+    b_frac: int
+    out_frac: int
+    out_shift: int
+    bias_shift: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimaryCapsPlan:
+    """conv plan + the integer squash that lands capsules in Q0.7."""
+    conv: ConvPlan
+    squash_out_frac: int = 7
+
+    @property
+    def out_frac(self) -> int:
+        return self.squash_out_frac
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Dynamic routing (Alg. 5): one caps-output shift/format pair per
+    iteration, one agreement shift per non-final iteration, a shared
+    logit format, and the softmax operator variant as a plan field
+    (previously a method monkey-patched onto QCapsNet)."""
+    uhat_shift: int
+    logit_frac: int
+    caps_out_shifts: tuple
+    caps_out_fracs: tuple
+    agree_shifts: tuple
+    softmax_impl: str = "q7"        # "q7" (arm_softmax-style) | "precise"
+    in_frac: int = 7                # post-squash capsules are Q0.7
+    W_frac: int = 0                 # bookkeeping for requantization/export
+    uhat_frac: int = 0
+
+    @property
+    def routings(self) -> int:
+        return len(self.caps_out_shifts)
+
+    @property
+    def out_frac(self) -> int:
+        return 7                    # squash output is Q0.7 by construction
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """The whole network's quantization decision: the input image format
+    plus one typed plan per layer, keyed by layer name in walk order."""
+    input_frac: int
+    layers: dict
+
+    def __getitem__(self, name: str):
+        return self.layers[name]
+
+
+def plan_scalars(plan) -> int:
+    """Number of scalar entries a plan materializes at runtime (the
+    analogue of the old shift table's length, for footprint accounting)."""
+    if isinstance(plan, PipelinePlan):
+        return 1 + sum(plan_scalars(p) for p in plan.layers.values())
+    n = 0
+    for f in dataclasses.fields(plan):
+        v = getattr(plan, f.name)
+        if isinstance(v, int):
+            n += 1
+        elif isinstance(v, tuple):
+            n += len(v)
+        elif dataclasses.is_dataclass(v):
+            n += plan_scalars(v)
+    return n

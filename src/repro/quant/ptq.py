@@ -1,14 +1,19 @@
-"""Post-training quantization framework (paper §4, Algorithms 6 & 7).
+"""Post-training quantization (paper §4, Algorithms 6 & 7) — compatibility
+shim over the typed repro.nn pipeline.
 
-Input:  a trained float CapsNet + a reference (calibration) dataset.
-Output: int8 weights/bias + the complete shift table for the int8
-inference pass (repro.core.capsnet_q7) — output shift and bias shift per
-matmul/conv, per-routing-iteration shifts for the capsule layer (Alg. 6:
-calc_caps_output and calc_agreement take one scaling factor per iteration).
+The per-layer format/shift derivation that used to be hand-rolled here
+(one block per layer, ~25 string keys) now belongs to the layers
+themselves: `CapsPipeline.quantize` asks each layer for its own
+`LayerQuantPlan`.  This module keeps the original entry points and the
+legacy `QCapsNet` (string-keyed shift table) output for existing callers;
+the keys are produced by `repro.nn.compat.plan_to_shifts` — a pure
+renaming of the typed plans.
 
-The activation Qm.n formats are *static*: calibrated once from the maximum
-absolute values observed on the reference dataset, exactly as the paper
-prescribes for CMSIS-NN/PULP-NN compatibility.
+New code should use the pipeline directly:
+
+    pipe = CapsPipeline.from_config(cfg)
+    qnet = pipe.quantize(params, calib_images, rounding="nearest")
+    v = qnet.forward(qnet.quantize_input(images))
 """
 from __future__ import annotations
 
@@ -16,10 +21,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import capsnet as C
 from repro.core.capsnet_q7 import QCapsNet
+from repro.nn import compat
+from repro.nn.pipeline import QuantCapsNet
 from repro.quant import qformat as qf
 
 
@@ -30,84 +36,36 @@ class CalibStats:
 
 def calibrate(params, cfg, calib_images, batch: int = 64) -> CalibStats:
     """Run the float model over the reference dataset recording max|x| at
-    every quantization point (Alg. 6 line 8)."""
-    fwd = jax.jit(lambda x: C.capsnet_forward(params, x, cfg,
-                                              with_trace=True)[1])
-    maxes: dict[str, float] = {}
-    n = calib_images.shape[0]
-    for i in range(0, n, batch):
-        trace = fwd(calib_images[i:i + batch])
-        for k, t in trace.items():
-            m = float(jnp.max(jnp.abs(t)))
-            maxes[k] = max(maxes.get(k, 0.0), m)
-    return CalibStats(maxes)
+    every quantization point (Alg. 6 line 8).  Legacy trace-key names."""
+    stats = C.pipeline(cfg).calibrate(params, calib_images, batch=batch)
+    return CalibStats({compat.tap_to_trace_key(k): v
+                       for k, v in stats.max_abs.items()})
 
 
 def quantize_capsnet(params, cfg, calib_images, *,
                      rounding: str = "floor",
                      per_channel: bool = False) -> QCapsNet:
-    """Alg. 6: quantize weights & bias (Alg. 7), derive all shifts."""
-    stats = calibrate(params, cfg, calib_images)
-    fb = qf.frac_bits
-    weights: dict = {}
-    shifts: dict = {}
+    """Alg. 6: quantize weights & bias (Alg. 7), derive all shifts.
 
-    f_act = fb(stats.max_abs["input"])         # input image format
-    shifts["input_frac"] = f_act
-
-    # --- convolutional stack -------------------------------------------
-    for i in range(len(cfg.conv_filters)):
-        p = params[f"conv{i}"]
-        f_w = fb(float(jnp.max(jnp.abs(p["w"]))))
-        f_b = fb(float(jnp.max(jnp.abs(p["b"])))) if p["b"].size else f_w
-        f_out = fb(stats.max_abs[f"conv{i}_out"])
-        weights[f"conv{i}"] = {"w": qf.quantize(p["w"], f_w),
-                               "b": qf.quantize(p["b"], f_b)}
-        shifts[f"conv{i}_w_frac"] = f_w
-        shifts[f"conv{i}_out_frac"] = f_out
-        shifts[f"conv{i}_out_shift"] = qf.out_shift(f_act, f_w, f_out)
-        shifts[f"conv{i}_bias_shift"] = qf.bias_shift(f_act, f_w, f_b)
-        f_act = f_out                           # relu preserves the format
-
-    # --- primary capsule layer ------------------------------------------
-    p = params["pcap"]
-    f_w = fb(float(jnp.max(jnp.abs(p["w"]))))
-    f_b = fb(float(jnp.max(jnp.abs(p["b"]))))
-    f_out = fb(stats.max_abs["pcap_out"])
-    weights["pcap"] = {"w": qf.quantize(p["w"], f_w),
-                       "b": qf.quantize(p["b"], f_b)}
-    shifts["pcap_w_frac"] = f_w
-    shifts["pcap_out_frac"] = f_out
-    shifts["pcap_out_shift"] = qf.out_shift(f_act, f_w, f_out)
-    shifts["pcap_bias_shift"] = qf.bias_shift(f_act, f_w, f_b)
-    # squash output is Q0.7 by construction (paper §3.2)
-
-    # --- capsule layer ----------------------------------------------------
-    W = params["caps"]["W"]
-    f_W = fb(float(jnp.max(jnp.abs(W))))
-    f_uhat = fb(stats.max_abs["u_hat"])
-    weights["caps"] = {"W": qf.quantize(W, f_W)}
-    shifts["caps_W_frac"] = f_W
-    shifts["uhat_frac"] = f_uhat
-    shifts["uhat_shift"] = qf.out_shift(7, f_W, f_uhat)   # u is Q0.7
-
-    # logits format: shared across iterations (b accumulates agreements)
-    max_logit = max([stats.max_abs.get(f"logits_iter{r}", 0.0)
-                     for r in range(cfg.routings)] + [1e-6])
-    f_logit = min(fb(max_logit), 7)
-    shifts["logit_frac"] = f_logit
-
-    for r in range(cfg.routings):
-        f_s = fb(stats.max_abs[f"s_iter{r}"])
-        shifts[f"caps_out_frac_{r}"] = f_s
-        # c is Q0.7
-        shifts[f"caps_out_shift_{r}"] = qf.out_shift(f_uhat, 7, f_s)
-        if r < cfg.routings - 1:
-            # agreement <u_hat, v>: u_hat f_uhat, v Q0.7 -> logits format
-            shifts[f"agree_shift_{r}"] = qf.out_shift(f_uhat, 7, f_logit)
-
-    return QCapsNet(cfg=cfg, weights=weights, shifts=shifts,
+    Returns the legacy string-keyed QCapsNet; `quantize_pipeline` returns
+    the typed equivalent."""
+    if per_channel:
+        raise NotImplementedError(
+            "per-channel PTQ is a planned plan-field extension (see "
+            "ROADMAP); qformat.quantize_per_channel exists but no layer "
+            "plan carries per-channel shifts yet")
+    qnet = quantize_pipeline(params, cfg, calib_images, rounding=rounding)
+    return QCapsNet(cfg=cfg, weights=qnet.qweights,
+                    shifts=compat.plan_to_shifts(qnet.plan),
                     rounding=rounding)
+
+
+def quantize_pipeline(params, cfg, calib_images, *,
+                      rounding: str = "floor",
+                      backend: str = "jnp") -> QuantCapsNet:
+    """The typed path: per-layer plans, no string keys."""
+    return C.pipeline(cfg).quantize(params, calib_images,
+                                    rounding=rounding, backend=backend)
 
 
 def quantize_input(x, frac: int = 7):
@@ -118,7 +76,7 @@ def quantize_input(x, frac: int = 7):
 # ---------------------------------------------------------------------------
 # evaluation helpers (Table 2 analogue)
 # ---------------------------------------------------------------------------
-def footprint_report(params, qmodel: QCapsNet) -> dict:
+def footprint_report(params, qmodel) -> dict:
     fp32 = C.param_bytes_fp32(params)
     int8 = qmodel.memory_bytes()
     return {

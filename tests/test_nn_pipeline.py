@@ -1,0 +1,149 @@
+"""Tests for the typed capsule layer/pipeline API (repro.nn).
+
+Core guarantees:
+  * the typed int8 path is bit-identical to the legacy string-keyed
+    qcapsnet_forward for every paper config (same weights, same
+    calibration set) — through BOTH the typed plan and a round-trip via
+    the legacy shift table;
+  * calibration is complete by construction: every stats key a layer's
+    plan() reads is emitted as a tap by its fwd_f32();
+  * footprint accounting uses real itemsizes (int32 leaves count 4 B)
+    and reproduces the paper's ~75 % saving (Table 2).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capsnet as C
+from repro.core.capsnet_q7 import QCapsNet, qcapsnet_forward
+from repro.nn import compat
+from repro.nn.pipeline import CapsPipeline
+from repro.quant import ptq
+
+
+def _setup(cfg, n_calib=32, n_test=2, seed=7):
+    params = C.init_capsnet(jax.random.key(0), cfg)
+    rng = np.random.default_rng(seed)
+    calib = jnp.asarray(
+        rng.uniform(0, 1, (n_calib,) + cfg.input_shape).astype(np.float32))
+    x = jnp.asarray(
+        rng.uniform(0, 1, (n_test,) + cfg.input_shape).astype(np.float32))
+    return params, calib, x
+
+
+@pytest.mark.parametrize("name", sorted(C.CAPSNET_CONFIGS))
+@pytest.mark.parametrize("rounding", ["floor", "nearest"])
+def test_pipeline_q7_bit_identical_to_legacy(name, rounding):
+    """CapsPipeline.forward_q7 == legacy qcapsnet_forward, bit for bit,
+    for all three paper configs — and the legacy shift table derived from
+    the typed plans reproduces the same output when translated back."""
+    cfg = C.CAPSNET_CONFIGS[name]
+    params, calib, x = _setup(cfg)
+
+    qnet = ptq.quantize_pipeline(params, cfg, calib, rounding=rounding)
+    legacy = ptq.quantize_capsnet(params, cfg, calib, rounding=rounding)
+
+    xq = qnet.quantize_input(x)
+    np.testing.assert_array_equal(
+        np.asarray(xq),
+        np.asarray(ptq.quantize_input(x, legacy.shifts["input_frac"])))
+
+    v_typed = qnet.forward(xq)
+    v_legacy = qcapsnet_forward(legacy, xq)
+    assert v_typed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(v_typed), np.asarray(v_legacy))
+
+    # weights agree leaf-for-leaf too (same Alg. 7 quantization)
+    for a, b in zip(jax.tree_util.tree_leaves(qnet.qweights),
+                    jax.tree_util.tree_leaves(legacy.weights)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_taps_cover_every_plan_input():
+    """Completeness: the tap names each layer's plan() reads are exactly
+    emitted by the float forward — no silent KeyError paths."""
+    for cfg in C.CAPSNET_CONFIGS.values():
+        pipe = CapsPipeline.from_config(cfg)
+        params = pipe.init(jax.random.key(0))
+        x = jnp.zeros((1,) + cfg.input_shape, jnp.float32)
+        _, taps = pipe.forward(params, x, with_taps=True)
+        missing = set(pipe.tap_names()) - set(taps)
+        assert not missing, (cfg.name, missing)
+        # and the plan actually builds from those taps alone
+        stats = pipe.calibrate(params, jnp.ones((2,) + cfg.input_shape))
+        plan = pipe.plan(params, stats)
+        assert set(plan.layers) == {l.name for l in pipe.layers}
+
+
+def test_plan_shift_table_round_trip():
+    """plan -> legacy shift table -> plan is lossless for execution."""
+    cfg = C.MNIST
+    params, calib, x = _setup(cfg)
+    qnet = ptq.quantize_pipeline(params, cfg, calib)
+    shifts = compat.plan_to_shifts(qnet.plan)
+    plan2 = compat.shifts_to_plan(shifts, len(cfg.conv_filters),
+                                  cfg.routings)
+    xq = qnet.quantize_input(x)
+    v1 = qnet.pipeline.forward_q7(qnet.qweights, qnet.plan, xq)
+    v2 = qnet.pipeline.forward_q7(qnet.qweights, plan2, xq)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_softmax_impl_is_a_plan_field():
+    """The q7/precise softmax choice travels through the plan (no
+    monkey-patched method on QCapsNet)."""
+    assert "softmax" not in vars(QCapsNet)
+    cfg = C.CIFAR10
+    params, calib, x = _setup(cfg)
+    qnet = ptq.quantize_pipeline(params, cfg, calib)
+    xq = qnet.quantize_input(x)
+    v_q7 = qnet.forward(xq)
+    v_precise = qnet.with_softmax("precise").forward(xq)
+    assert qnet.plan["caps"].softmax_impl == "q7"
+    assert v_precise.shape == v_q7.shape
+    # the legacy shim honours the field the same way
+    legacy = ptq.quantize_capsnet(params, cfg, calib)
+    lp = dataclasses.replace(legacy, softmax_impl="precise")
+    np.testing.assert_array_equal(np.asarray(qcapsnet_forward(lp, xq)),
+                                  np.asarray(v_precise))
+
+
+def test_pallas_backend_matches_oracle():
+    """backend="pallas" (interpret mode on CPU) is bit-identical to the
+    jnp oracle on the smallest paper geometry."""
+    cfg = C.CIFAR10
+    params, calib, x = _setup(cfg, n_calib=16, n_test=1)
+    qnet = ptq.quantize_pipeline(params, cfg, calib)
+    xq = qnet.quantize_input(x)
+    v_jnp = qnet.forward(xq)
+    v_pal = qnet.with_backend("pallas").forward(xq)
+    np.testing.assert_array_equal(np.asarray(v_jnp), np.asarray(v_pal))
+
+
+def test_memory_bytes_uses_itemsize():
+    """Regression: non-int8 leaves must be counted at their real width
+    (the old sum counted every element as one byte)."""
+    cfg = C.MNIST
+    w = {"conv0": {"w": jnp.zeros((10,), jnp.int8),
+                   "b": jnp.zeros((5,), jnp.int32)}}
+    m = QCapsNet(cfg=cfg, weights=w, shifts={"input_frac": 7})
+    assert m.memory_bytes() == 10 * 1 + 5 * 4 + 4 * 1
+
+
+def test_mnist_L_footprint_matches_table2():
+    """Paper Table 2, MNIST 'L': 1187.20 KB fp32 -> ~75 % int8 saving."""
+    cfg = C.MNIST
+    params, calib, _ = _setup(cfg)
+    qm = ptq.quantize_capsnet(params, cfg, calib)
+    rep = ptq.footprint_report(params, qm)
+    # paper's KB are decimal: 296.8k params x 4 B = 1187.20 KB
+    assert C.param_bytes_fp32(params) / 1000.0 == pytest.approx(1187.20)
+    assert 74.5 <= rep["saving_pct"] <= 75.0       # paper: 74.99 %
+    assert qm.memory_bytes() / 1000.0 == pytest.approx(1187.20 / 4, abs=0.5)
+    # typed container agrees with the legacy accounting (plan table is a
+    # few dozen int32 scalars, just like the shift dict)
+    qnet = ptq.quantize_pipeline(params, cfg, calib)
+    assert abs(qnet.memory_bytes() - qm.memory_bytes()) < 256

@@ -1,9 +1,16 @@
 """Property-based tests (hypothesis) for the quantization framework's
-invariants and the int8 numeric semantics."""
+invariants and the int8 numeric semantics.
+
+hypothesis is an OPTIONAL test dependency (declared in pyproject.toml's
+`test` extra); this module skips cleanly when it is not installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.quant import int8_ops as q
 from repro.quant import qformat as qf
