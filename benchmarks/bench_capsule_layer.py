@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import util
 from benchmarks.util import csv_row, time_call
 from repro.core import capsnet as C
 from repro.core.capsnet_q7 import QCapsNet, capsule_layer_q7
@@ -25,7 +26,7 @@ CASES = [("mnist_L", C.MNIST, 1024), ("smallnorb_M", C.SMALLNORB, 1600),
 
 def main():
     rng = np.random.default_rng(0)
-    for name, cfg, I in CASES:
+    for name, cfg, I in CASES[-1:] if util.SMOKE else CASES:
         J, O, D, R = cfg.num_classes, cfg.caps_dim, cfg.pcap_dim, \
             cfg.routings
         W = jnp.asarray(rng.integers(-128, 128, (J, I, O, D)), jnp.int8)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import util
 from benchmarks.util import csv_row, time_call
 from repro.core import capsnet as C
 from repro.core.capsnet_q7 import QCapsNet, pcap_q7
@@ -21,7 +22,7 @@ CASES = [("mnist_M", C.MNIST), ("smallnorb_L", C.SMALLNORB),
 
 def main():
     rng = np.random.default_rng(0)
-    for name, cfg in CASES:
+    for name, cfg in CASES[-1:] if util.SMOKE else CASES:
         h, w = cfg.conv_out_hw
         cin = cfg.conv_filters[-1]
         x = jnp.asarray(rng.integers(-128, 128, (1, h, w, cin)), jnp.int8)

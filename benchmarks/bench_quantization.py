@@ -6,6 +6,7 @@ fast by reporting footprint + calibration/quantization wall time).
 import jax
 import jax.numpy as jnp
 
+from benchmarks import util
 from benchmarks.util import csv_row, time_call
 from repro.core import capsnet as C
 from repro.data.synthetic import make_image_dataset
@@ -16,9 +17,10 @@ CASES = [("mnist", C.MNIST), ("smallnorb", C.SMALLNORB),
 
 
 def main():
-    for name, cfg in CASES:
+    n_calib = 16 if util.SMOKE else 64
+    for name, cfg in CASES[-1:] if util.SMOKE else CASES:
         params = C.init_capsnet(jax.random.key(0), cfg)
-        calib = jnp.asarray(make_image_dataset(name, 64, seed=1)[0])
+        calib = jnp.asarray(make_image_dataset(name, n_calib, seed=1)[0])
         qm = ptq.quantize_capsnet(params, cfg, calib)
         rep = ptq.footprint_report(params, qm)
         us = time_call(lambda: ptq.quantize_capsnet(params, cfg, calib),

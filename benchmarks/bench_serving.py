@@ -1,0 +1,53 @@
+"""Serving-engine benchmark: batched micro-batch waves vs a batch-size-1
+request loop on the same quantized model.
+
+The paper stops at per-layer kernel latency; this section measures the
+deployment quantity the ROADMAP asks for — sustained images/sec through
+`repro.serving.CapsServeEngine`.  Two rows per model:
+
+  serve_b1_*       the naive loop: every request its own bucket-1 wave
+  serve_batched_*  bucketed waves (requests padded up to the buckets)
+
+Models: `edge_tiny@jnp` — the deep-edge micro geometry where a batch-1
+loop is dominated by per-request dispatch/sync overhead, i.e. the regime
+the wave scheduler exists for (this is where the >=2x batched win lives)
+— and, outside smoke mode, the paper's MNIST "L" geometry, whose int8
+routing is memory-bound on the CPU validation substrate, so its wall
+clock mostly shows that batching does not cost anything there (on the
+paper's target parts the win returns because kernel-launch overhead per
+request is the dominating term — same argument as the fused-routing
+rows in bench_capsule_layer).
+
+derived carries img/s; the batched row adds speedup over b1, p95 request
+latency, and wave occupancy.  Executables are warmed before timing so
+both rows pay zero compiles.
+"""
+from benchmarks import util
+from benchmarks.util import csv_row
+from repro.serving import ModelRegistry, serve_window
+
+
+def main():
+    if util.SMOKE:
+        cases = [("edge_tiny@jnp", 16, (1, 8))]
+    else:
+        cases = [("edge_tiny@jnp", 64, (1, 8, 32)),
+                 ("mnist@jnp", 32, (1, 8, 32))]
+    registry = ModelRegistry()
+    for model_id, n_req, buckets in cases:
+        images = registry.specs[model_id].images(n_req, seed=5)
+
+        _, b1_wall = serve_window(registry, (1,), images, model_id)
+        csv_row(f"serve_b1_{model_id}", b1_wall * 1e6 / n_req,
+                f"{n_req / b1_wall:.1f}img/s")
+
+        engine, wall = serve_window(registry, buckets, images, model_id)
+        s = engine.metrics.summary()
+        csv_row(f"serve_batched_{model_id}", wall * 1e6 / n_req,
+                f"{s['images_per_s']:.1f}img/s_speedup="
+                f"{b1_wall / wall:.1f}x_p95={s['p95_ms']:.1f}ms"
+                f"_occ={s['occupancy']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

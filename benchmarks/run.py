@@ -9,18 +9,26 @@ Sections (one per paper table):
   Tables 5/6 -> bench_primary_caps (primary capsule layer)
   Tables 7/8 -> bench_capsule_layer(capsule layer / dynamic routing,
                                     unfused vs fused-VMEM kernel)
+beyond-paper:
+  serving    -> bench_serving      (batched engine vs batch-1 loop)
 plus the roofline summary from the dry-run artifacts (if present).
 
 CPU wall-clock is the validation substrate (interpret-mode kernels); the
-derived column carries the hardware-independent figure.
+derived column carries the hardware-independent figure.  `--smoke` (CI)
+runs every section at minimal reps/sizes so harness bit-rot fails fast.
 """
+import os
 import sys
 
 
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        # must land before benchmarks.util is imported (it reads the env)
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     print("name,us_per_call,derived")
     from benchmarks import (bench_capsule_layer, bench_matmul,
-                            bench_primary_caps, bench_quantization)
+                            bench_primary_caps, bench_quantization,
+                            bench_serving)
     print("# --- Table 2: quantization framework ---")
     bench_quantization.main()
     print("# --- Tables 3/4: int8 matmul variants ---")
@@ -29,6 +37,8 @@ def main() -> None:
     bench_primary_caps.main()
     print("# --- Tables 7/8: capsule layer (dynamic routing) ---")
     bench_capsule_layer.main()
+    print("# --- Serving: batched int8 engine vs b1 loop ---")
+    bench_serving.main()
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():

@@ -1,11 +1,19 @@
 """Benchmark timing helpers."""
+import os
 import time
 
 import jax
 
+# CI bit-rot check: REPRO_BENCH_SMOKE=1 (or `python -m benchmarks.run
+# --smoke`) runs every section with minimal reps/sizes — the point is
+# that each harness still executes, not that its numbers are stable.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
 
 def time_call(fn, *args, warmup: int = 2, reps: int = 10) -> float:
     """Median wall time of fn(*args) in microseconds (blocking)."""
+    if SMOKE:
+        warmup, reps = 0, 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

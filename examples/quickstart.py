@@ -1,12 +1,14 @@
-"""Quickstart: quantize a CapsNet to int8 and run the paper's kernels.
+"""Quickstart: quantize a CapsNet to int8 with the typed pipeline API,
+verify the Pallas kernels bit-for-bit, then serve batched requests.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's MNIST CapsNet (Table 1), post-training-quantizes it with
-the Qm.n power-of-two framework (Alg. 6/7), and runs one int8 inference
-through (a) the exact jnp semantics and (b) the Pallas kernels — verifying
-they agree bit-for-bit — then prints the footprint report (Table 2
-analogue).
+Builds the paper's MNIST CapsNet (Table 1) as a `repro.nn.CapsPipeline`,
+post-training-quantizes it with the Qm.n power-of-two framework
+(Alg. 6/7), checks the jnp oracle against the Pallas kernel backend,
+prints the footprint report (Table 2 analogue), and finally drives the
+quantized model through `repro.serving.CapsServeEngine` — the bucketed
+micro-batch scheduler that turns one-shot int8 inference into a service.
 """
 import sys
 sys.path.insert(0, "src")
@@ -15,15 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import capsnet as C
-from repro.core.capsnet_q7 import qcapsnet_forward, qclass_lengths, pcap_q7
 from repro.data.synthetic import make_image_dataset
-from repro.kernels import ops as kops
-from repro.quant import int8_ops as q, ptq
+from repro.nn import MNIST, CapsPipeline
+from repro.quant import ptq
+from repro.serving import CapsServeEngine, ModelRegistry
 
 
 def main():
-    cfg = C.MNIST
+    cfg = MNIST
     print(f"== {cfg.name}: conv{cfg.conv_filters} -> primary caps "
           f"{cfg.pcap_caps}x{cfg.pcap_dim} -> class caps "
           f"{cfg.num_classes}x{cfg.caps_dim} (routings={cfg.routings})")
@@ -31,48 +32,47 @@ def main():
           f"{cfg.num_input_caps}x{cfg.caps_dim}x{cfg.pcap_dim} "
           f"(paper Table 7 'L')")
 
-    params = C.init_capsnet(jax.random.key(0), cfg)
+    pipe = CapsPipeline.from_config(cfg)
+    params = pipe.init(jax.random.key(0))
 
-    # --- post-training quantization (paper §4) ---------------------------
+    # --- post-training quantization (paper §4, Alg. 6/7) ------------------
     calib = jnp.asarray(make_image_dataset("mnist", 64, seed=1)[0])
-    qm = ptq.quantize_capsnet(params, cfg, calib, rounding="nearest")
-    rep = ptq.footprint_report(params, qm)
+    qnet = pipe.quantize(params, calib, rounding="nearest")
+    rep = ptq.footprint_report(params, qnet)
     print(f"   footprint: fp32 {rep['fp32_kb']:.2f} KB -> int8 "
           f"{rep['int8_kb']:.2f} KB  (saving {rep['saving_pct']:.2f} %)")
-    print(f"   shift table: { {k: v for k, v in list(qm.shifts.items())[:6]} } ...")
+    caps_plan = qnet.plan["caps"]
+    print(f"   caps plan: uhat_shift={caps_plan.uhat_shift} "
+          f"logit_frac={caps_plan.logit_frac} "
+          f"caps_out_shifts={caps_plan.caps_out_shifts} "
+          f"softmax={caps_plan.softmax_impl}")
 
-    # --- int8 inference: jnp oracle vs Pallas kernels ---------------------
-    x, _ = make_image_dataset("mnist", 4, seed=2)
-    xq = ptq.quantize_input(jnp.asarray(x), qm.shifts["input_frac"])
-    v_ref = qcapsnet_forward(qm, xq)
-
-    h = xq
-    for i in range(len(cfg.conv_filters)):
-        h = q.conv2d_q7(h, qm.weights[f"conv{i}"]["w"],
-                        qm.weights[f"conv{i}"]["b"],
-                        qm.shifts[f"conv{i}_out_shift"],
-                        qm.shifts[f"conv{i}_bias_shift"],
-                        stride=cfg.conv_strides[i], rounding=qm.rounding)
-        h = q.relu_q7(h)
-    u = pcap_q7(qm, h)
-    acc = jnp.einsum("jiod,bid->bjio",
-                     qm.weights["caps"]["W"].astype(jnp.int32),
-                     u.astype(jnp.int32))
-    u_hat = q.rshift_sat8(acc, qm.shifts["uhat_shift"], qm.rounding)
-    v_kern = kops.routing_q7(
-        u_hat, num_iters=cfg.routings,
-        caps_out_shifts=tuple(qm.shifts[f"caps_out_shift_{r}"]
-                              for r in range(cfg.routings)),
-        caps_out_fracs=tuple(qm.shifts[f"caps_out_frac_{r}"]
-                             for r in range(cfg.routings)),
-        agree_shifts=tuple(qm.shifts[f"agree_shift_{r}"]
-                           for r in range(cfg.routings - 1)),
-        logit_frac=qm.shifts["logit_frac"], rounding=qm.rounding)
+    # --- int8 inference: jnp oracle vs Pallas kernel backend --------------
+    x = jnp.asarray(make_image_dataset("mnist", 4, seed=2)[0])
+    xq = qnet.quantize_input(x)
+    v_ref = qnet.forward(xq)                       # jnp oracle semantics
+    v_kern = qnet.with_backend("pallas").forward(xq)   # fused routing
     match = bool(jnp.all(v_ref == v_kern))
     print(f"   fused Pallas routing kernel == int8 oracle: {match}")
     assert match
     print(f"   class lengths (sample 0): "
-          f"{np.asarray(qclass_lengths(qm, v_ref))[0].round(3)}")
+          f"{np.asarray(qnet.class_lengths(v_ref))[0].round(3)}")
+
+    # --- serve it: bucketed micro-batch waves -----------------------------
+    registry = ModelRegistry(specs={})
+    registry.install("mnist", qnet)
+    engine = CapsServeEngine(registry, buckets=(1, 4, 8))
+    engine.warmup("mnist")
+    images = make_image_dataset("mnist", 6, seed=3)[0]
+    engine.submit_many(images, "mnist")
+    done = engine.drain()
+    print(f"   served preds: {[c.pred for c in done]} "
+          f"(wave buckets: {sorted({c.bucket for c in done})})")
+    print(f"   {engine.metrics.report()}")
+    # engine waves are bit-identical to direct QuantCapsNet.forward
+    v_direct = np.asarray(qnet.forward(qnet.quantize_input(
+        jnp.asarray(images))))
+    assert all(np.array_equal(c.v_q, v_direct[c.rid]) for c in done)
     print("quickstart OK")
 
 

@@ -59,7 +59,11 @@ class JnpBackend:
             if r < plan.routings - 1:
                 acc = jnp.einsum("bjio,bjo->bji", u_hat.astype(jnp.int32),
                                  v.astype(jnp.int32))
-                a = q.rshift_sat8(acc, plan.agree_shifts[r], rounding)
+                # agree_shifts were derived for a Q0.7 squash output
+                # (layers.py); compensate when the plan's squash_out_frac
+                # has been edited so logits keep their Q(f_logit) format
+                a = q.rshift_sat8(
+                    acc, plan.agree_shifts[r] + plan.out_frac - 7, rounding)
                 b = q.add_q7(b, a)
         return v
 
@@ -76,7 +80,9 @@ class PallasBackend(JnpBackend):
         return kops.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
 
     def routing_q7(self, u_hat, plan, *, rounding):
-        if plan.softmax_impl != "q7":
+        # the fused kernel implements only the "q7" softmax and the Q0.7
+        # squash output; other plan variants take the oracle loop
+        if plan.softmax_impl != "q7" or plan.out_frac != 7:
             return super().routing_q7(u_hat, plan, rounding=rounding)
         from repro.kernels import ops as kops
         return kops.routing_q7(

@@ -81,16 +81,23 @@ class CapsPipeline:
     # calibration face (Alg. 6 line 8)
     # ------------------------------------------------------------------
     def calibrate(self, params, calib_images, batch: int = 64) -> TapStats:
-        fwd = jax.jit(
-            lambda x: self.forward(params, x, with_taps=True)[1])
-        maxes: dict = {}
+        """Running max|x| per tap accumulates on device; the host sees one
+        sync at the end, not one `float()` per tap per batch."""
+        @jax.jit
+        def batch_maxes(x):
+            _, taps = self.forward(params, x, with_taps=True)
+            return {k: jnp.max(jnp.abs(t)) for k, t in taps.items()}
+
+        running = None
         n = calib_images.shape[0]
         for i in range(0, n, batch):
-            taps = fwd(calib_images[i:i + batch])
-            for k, t in taps.items():
-                m = float(jnp.max(jnp.abs(t)))
-                maxes[k] = max(maxes.get(k, 0.0), m)
-        return TapStats(maxes)
+            m = batch_maxes(calib_images[i:i + batch])
+            running = m if running is None else \
+                jax.tree.map(jnp.maximum, running, m)
+        if running is None:
+            raise ValueError("empty calibration set")
+        return TapStats({k: float(v)
+                         for k, v in jax.device_get(running).items()})
 
     # ------------------------------------------------------------------
     # planning + quantization face (Alg. 6 & 7)
@@ -151,9 +158,13 @@ class QuantCapsNet:
                                         rounding=self.rounding)
 
     def class_lengths(self, v_q):
+        """||v|| per class, dequantized with the final layer's output
+        format (not a hardcoded Q0.7 /128 — squash_out_frac is a plan
+        field and non-default plans must score correctly)."""
+        out_frac = self.plan[self.pipeline.layers[-1].name].out_frac
         v32 = v_q.astype(jnp.int32)
         return jnp.sqrt(jnp.sum(v32 * v32, axis=-1)
-                        .astype(jnp.float32)) / 128.0
+                        .astype(jnp.float32)) * (2.0 ** -out_frac)
 
     def memory_bytes(self) -> int:
         n = sum(l.size * l.dtype.itemsize

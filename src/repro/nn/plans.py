@@ -61,11 +61,14 @@ class RoutingPlan:
     logit_frac: int
     caps_out_shifts: tuple
     caps_out_fracs: tuple
-    agree_shifts: tuple
+    agree_shifts: tuple              # derived for a Q0.7 squash output;
+    #                                  backends add (out_frac - 7) when
+    #                                  squash_out_frac is edited
     softmax_impl: str = "q7"        # "q7" (arm_softmax-style) | "precise"
     in_frac: int = 7                # post-squash capsules are Q0.7
     W_frac: int = 0                 # bookkeeping for requantization/export
     uhat_frac: int = 0
+    squash_out_frac: int = 7        # Q0.7 default; a plan edit, like softmax
 
     @property
     def routings(self) -> int:
@@ -73,7 +76,7 @@ class RoutingPlan:
 
     @property
     def out_frac(self) -> int:
-        return 7                    # squash output is Q0.7 by construction
+        return self.squash_out_frac
 
 
 @dataclasses.dataclass(frozen=True)

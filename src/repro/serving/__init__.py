@@ -1,0 +1,8 @@
+"""Batched int8 CapsNet serving engine (see README.md in this package)."""
+from repro.serving.engine import (CapsServeEngine, Completion,  # noqa: F401
+                                  DEFAULT_BUCKETS, Request, serve_window)
+from repro.serving.metrics import ServeMetrics  # noqa: F401
+from repro.serving.registry import (EDGE_TINY, ModelRegistry,  # noqa: F401
+                                    ModelSpec, default_specs)
+from repro.serving.sharded import (CompiledWave, compile_wave,  # noqa: F401
+                                   wave_fn)

@@ -1,0 +1,153 @@
+"""Multi-model registry: model ids -> quantized CapsNets + compiled waves.
+
+Two caches with different lifetimes:
+
+  * model cache — `model(id)` builds a `QuantCapsNet` lazily on first
+    request (init -> calibrate -> PTQ, paper Alg. 6/7); trained or
+    externally-quantized models are `install()`ed under an id and skip
+    the lazy path entirely.
+  * executable cache — `executable(id, bucket)` AOT-compiles the wave
+    (sharded.compile_wave, under the registry's mesh if any) once per
+    (model, backend, bucket) and reuses it for every later wave.  The
+    backend is part of the model id's spec, so the tuple key is
+    (model_id, bucket).
+
+`quantize_count` / `compile_count` / `exec_hits` make both caches
+observable — tests pin reuse instead of trusting it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import make_image_dataset
+from repro.nn.config import (CAPSNET_CONFIGS, CIFAR10, MNIST, SMALLNORB,
+                             CapsNetConfig)
+from repro.nn.pipeline import CapsPipeline, QuantCapsNet
+from repro.serving import sharded
+
+
+# Deep-edge micro geometry: the paper's target class of model (MCU-sized
+# CapsNets) shrunk to where per-request dispatch overhead, not compute,
+# dominates a batch-1 loop — the regime the wave scheduler exists for.
+# 16x16 gray -> conv8 k5 s2 -> 6x6; pcap k3 s2 -> 2x2x(4x4) -> 16 caps
+# -> caps layer 4x16x4x4, 2 routing iterations.
+EDGE_TINY = CapsNetConfig("capsnet_edge_tiny", (16, 16, 1), (8,), (5,),
+                          (2,), pcap_caps=4, pcap_dim=4, pcap_kernel=3,
+                          pcap_stride=2, num_classes=4, caps_dim=4,
+                          routings=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything needed to materialize a servable quantized CapsNet."""
+    model_id: str
+    config: CapsNetConfig
+    backend: str = "jnp"             # "jnp" oracle | "pallas" kernels
+    rounding: str = "floor"
+    dataset: str = "mnist"           # calibration kind, or "uniform"
+    calib_n: int = 32
+    seed: int = 0
+    softmax_impl: str = "q7"
+
+    def images(self, n: int, seed: int) -> np.ndarray:
+        """n request/calibration images matching the config's geometry
+        ("uniform" serves ad-hoc geometries with no dataset analogue)."""
+        if self.dataset == "uniform":
+            rng = np.random.default_rng(seed)
+            shape = (n,) + tuple(self.config.input_shape)
+            return rng.uniform(0, 1, shape).astype(np.float32)
+        return make_image_dataset(self.dataset, n, seed=seed)[0]
+
+    def build(self) -> QuantCapsNet:
+        pipe = CapsPipeline.from_config(self.config,
+                                        softmax_impl=self.softmax_impl)
+        params = pipe.init(jax.random.key(self.seed))
+        calib = jnp.asarray(self.images(self.calib_n, self.seed + 1))
+        return pipe.quantize(params, calib, rounding=self.rounding,
+                             backend=self.backend)
+
+
+def default_specs() -> dict:
+    """The paper's three configs plus the edge-tiny geometry, x both op
+    backends: "mnist@jnp", "cifar10@pallas", ... (ids are dataset@backend)."""
+    out = {}
+    for ds, cfg, kind in (("mnist", MNIST, "mnist"),
+                          ("smallnorb", SMALLNORB, "smallnorb"),
+                          ("cifar10", CIFAR10, "cifar10"),
+                          ("edge_tiny", EDGE_TINY, "uniform")):
+        for be in ("jnp", "pallas"):
+            mid = f"{ds}@{be}"
+            out[mid] = ModelSpec(mid, cfg, backend=be, dataset=kind)
+    return out
+
+
+class ModelRegistry:
+    def __init__(self, specs: dict | None = None, mesh=None):
+        self.specs = dict(specs) if specs is not None else default_specs()
+        self.mesh = mesh
+        self._models: dict = {}
+        self._execs: dict = {}
+        self.quantize_count = 0
+        self.compile_count = 0
+        self.exec_hits = 0
+
+    # ------------------------------------------------------------------
+    # models
+    # ------------------------------------------------------------------
+    def register(self, spec: ModelSpec) -> None:
+        self.specs[spec.model_id] = spec
+
+    def install(self, model_id: str, qnet: QuantCapsNet) -> None:
+        """Serve an already-built model (trained weights, custom plan)
+        under `model_id`, bypassing the lazy PTQ path.  Drops any wave
+        executables compiled for a previous model under this id — they
+        hold the old weights as baked-in constants."""
+        self._models[model_id] = qnet
+        for key in [k for k in self._execs if k[0] == model_id]:
+            del self._execs[key]
+
+    def model_ids(self) -> tuple:
+        return tuple(sorted(set(self.specs) | set(self._models)))
+
+    def has(self, model_id: str) -> bool:
+        return model_id in self._models or model_id in self.specs
+
+    def model(self, model_id: str) -> QuantCapsNet:
+        if model_id not in self._models:
+            try:
+                spec = self.specs[model_id]
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {model_id!r}; have {self.model_ids()}")
+            self._models[model_id] = spec.build()
+            self.quantize_count += 1
+        return self._models[model_id]
+
+    def input_shape(self, model_id: str) -> tuple:
+        """Static geometry only — must not trigger the lazy PTQ build
+        (submit() validates shapes with it before any wave runs)."""
+        if model_id in self._models:
+            return tuple(self._models[model_id].pipeline.cfg.input_shape)
+        return tuple(self.specs[model_id].config.input_shape)
+
+    # ------------------------------------------------------------------
+    # compiled wave executables
+    # ------------------------------------------------------------------
+    def executable(self, model_id: str, bucket: int) -> sharded.CompiledWave:
+        key = (model_id, bucket)
+        if key in self._execs:
+            self.exec_hits += 1
+            return self._execs[key]
+        exe = sharded.compile_wave(self.model(model_id), bucket,
+                                   mesh=self.mesh)
+        self._execs[key] = exe
+        self.compile_count += 1
+        return exe
+
+
+def config_for_dataset(dataset: str) -> CapsNetConfig:
+    return CAPSNET_CONFIGS[f"capsnet_{dataset}"]
