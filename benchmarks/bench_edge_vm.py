@@ -1,0 +1,53 @@
+"""Edge-export benchmark: NumPy q7 VM throughput + arena plan quality.
+
+Two row families per model:
+
+  edge_vm_*     images/sec of the bit-exact NumPy interpreter executing
+                the exported EdgeProgram (the host-side stand-in for the
+                MCU kernels — useful as a conservative lower bound and
+                as the regression canary for the export path's cost)
+  edge_arena_*  arena peak vs the naive sum of all activation tensors
+                (what a no-liveness allocator would reserve), plus the
+                flash/RAM split of the memory report
+
+The derived column carries the deployment quantities the paper's Table 2
+cares about: arena bytes, savings vs naive, and int8-vs-fp32 footprint.
+"""
+import numpy as np
+
+from benchmarks import util
+from benchmarks.util import csv_row
+from repro.edge import EdgeVM, lower, memory_report, plan_arena
+from repro.serving import ModelRegistry
+
+
+def main():
+    if util.SMOKE:
+        cases = [("edge_tiny@jnp", 8)]
+    else:
+        cases = [("edge_tiny@jnp", 64), ("mnist@jnp", 16)]
+    registry = ModelRegistry()
+    for model_id, n in cases:
+        spec = registry.specs[model_id]
+        qnet = registry.model(model_id)
+        program = lower(qnet)
+        vm = EdgeVM(program)
+        x_q = np.asarray(
+            qnet.quantize_input(np.asarray(spec.images(n, seed=11))))
+
+        us = util.time_call(lambda: vm.run(x_q))
+        csv_row(f"edge_vm_{model_id}", us / n,
+                f"{n / (us * 1e-6):.1f}img/s")
+
+        plan = plan_arena(program)
+        rep = memory_report(program, plan)
+        csv_row(f"edge_arena_{model_id}", 0.0,
+                f"arena={plan.arena_bytes}B_naive={plan.naive_bytes}B"
+                f"_saved={100 * (1 - plan.arena_bytes / plan.naive_bytes):.0f}%"
+                f"_flash={rep['flash_bytes'] / 1000:.1f}KB"
+                f"_ram={rep['ram_bytes'] / 1000:.1f}KB"
+                f"_vs_fp32={rep['saving_pct']:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

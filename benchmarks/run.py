@@ -26,9 +26,9 @@ def main() -> None:
         # must land before benchmarks.util is imported (it reads the env)
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     print("name,us_per_call,derived")
-    from benchmarks import (bench_capsule_layer, bench_matmul,
-                            bench_primary_caps, bench_quantization,
-                            bench_serving)
+    from benchmarks import (bench_capsule_layer, bench_edge_vm,
+                            bench_matmul, bench_primary_caps,
+                            bench_quantization, bench_serving)
     print("# --- Table 2: quantization framework ---")
     bench_quantization.main()
     print("# --- Tables 3/4: int8 matmul variants ---")
@@ -39,6 +39,8 @@ def main() -> None:
     bench_capsule_layer.main()
     print("# --- Serving: batched int8 engine vs b1 loop ---")
     bench_serving.main()
+    print("# --- Edge export: q7 VM + arena plan ---")
+    bench_edge_vm.main()
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():

@@ -1,0 +1,15 @@
+"""MCU export compiler for quantized CapsNets (see README.md here).
+
+QuantCapsNet -> lower() -> EdgeProgram -> { plan_arena() memory plan,
+EdgeVM bit-exact execution, emit_c() CMSIS-NN-style sources,
+save()/load() single-file artifact }.
+"""
+from repro.edge.arena import (ArenaPlan, assign_offsets,  # noqa: F401
+                              format_report, lifetimes, memory_report,
+                              op_scratch_bytes, plan_arena)
+from repro.edge.emit_c import emit_c, save_c  # noqa: F401
+from repro.edge.export import export_artifacts, format_export  # noqa: F401
+from repro.edge.lower import describe, lower  # noqa: F401
+from repro.edge.program import (EdgeOp, EdgeProgram,  # noqa: F401
+                                TensorSpec)
+from repro.edge.vm import EdgeVM, execute  # noqa: F401

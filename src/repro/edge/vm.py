@@ -1,0 +1,219 @@
+"""EdgeVM — a pure-NumPy q7 interpreter for `EdgeProgram`s.
+
+Executes the exported schedule with CMSIS-NN integer semantics — int8
+operands, int32 accumulation, power-of-two arithmetic shift, saturation
+to [-128, 127] — re-implemented here without jax so an artifact can be
+verified on any host, exactly the way the MCU kernels would run it.
+
+Bit-exactness contract: for programs lowered from a `QuantCapsNet`,
+`EdgeVM(program).run(x_q)` equals `qnet.forward(x_q)` bit for bit, for
+both rounding modes and per-tensor or per-channel conv plans
+(tests/test_edge.py pins this for all paper configs).  The only
+non-integer operator is the beyond-paper "precise" softmax variant,
+which uses float32 like its jnp counterpart and is therefore matched in
+value but not guaranteed to the last bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.edge.program import EdgeOp, EdgeProgram
+
+INT8_MIN, INT8_MAX = -128, 127
+_SQUASH_GUARD_BITS = 10             # must match quant.int8_ops
+
+
+# ---------------------------------------------------------------------------
+# integer primitives (NumPy mirrors of repro.quant.int8_ops)
+# ---------------------------------------------------------------------------
+def _sat8(x):
+    return np.clip(x, INT8_MIN, INT8_MAX).astype(np.int8)
+
+
+def _rshift_sat8(acc, shift: int, rounding: str):
+    acc = acc.astype(np.int32)
+    if shift > 0:
+        if rounding == "nearest":
+            acc = acc + (1 << (shift - 1))
+        acc = np.right_shift(acc, shift)
+    elif shift < 0:
+        acc = np.left_shift(acc, -shift)
+    return _sat8(acc)
+
+
+def _rshift_sat8_vec(acc, shifts, rounding: str):
+    """Per-lane (per-channel) variant; mirrors int8_ops.rshift_sat8_vec."""
+    acc = acc.astype(np.int32)
+    shifts = np.asarray(shifts, np.int32)
+    if rounding == "nearest":
+        half = np.left_shift(np.int32(1), np.maximum(shifts - 1, 0))
+        acc = acc + np.where(shifts > 0, half, 0)
+    acc = np.right_shift(acc, np.maximum(shifts, 0))
+    acc = np.left_shift(acc, np.maximum(-shifts, 0))
+    return _sat8(acc)
+
+
+def _conv2d_acc(x, w, stride: int):
+    """VALID NHWC int conv via im2col, int32 accumulation (wrap-on-
+    overflow, same as the XLA int32 conv — though no exported geometry
+    gets near 2^31)."""
+    kh, kw = w.shape[0], w.shape[1]
+    win = np.lib.stride_tricks.sliding_window_view(x, (kh, kw), axis=(1, 2))
+    win = win[:, ::stride, ::stride]            # [B,Ho,Wo,Cin,kh,kw]
+    return np.einsum("bhwcij,ijco->bhwo", win.astype(np.int32),
+                     w.astype(np.int32), dtype=np.int32)
+
+
+def _isqrt_newton(n):
+    """Vectorized Alg. 4 integer sqrt; mirrors int8_ops.isqrt_newton
+    (fixed 32 Newton steps with the monotonicity guard)."""
+    n = n.astype(np.int32)
+    x = np.maximum(n // 2, 1)
+    for _ in range(32):
+        nxt = (x + n // np.maximum(x, 1)) // 2
+        x = np.where(nxt < x, nxt, x)
+    return np.where(n <= 1, n, x)
+
+
+def _squash_q7(s, in_frac: int, out_frac: int):
+    s32 = s.astype(np.int32)
+    Q = np.sum(s32 * s32, axis=-1, keepdims=True, dtype=np.int32)
+    S = _isqrt_newton(Q)
+    P = _SQUASH_GUARD_BITS
+    shift = out_frac - in_frac + P
+    num = np.left_shift(S, shift) if shift >= 0 \
+        else np.right_shift(S, -shift)
+    den = (1 << in_frac) + np.right_shift(Q, in_frac)
+    ratio = num // np.maximum(den, 1)
+    v = np.right_shift(ratio * s32, P)
+    return _sat8(v)
+
+
+def _softmax_q7(x, in_frac: int):
+    x32 = x.astype(np.int32)
+    m = np.max(x32, axis=-1, keepdims=True)
+    e = np.maximum(np.right_shift(x32 - m, in_frac), -20)
+    p = np.left_shift(np.ones_like(e), 20 + e)
+    tot = np.sum(p, axis=-1, keepdims=True, dtype=np.int32)
+    c = np.left_shift(p, 7) // np.maximum(tot, 1)
+    return np.clip(c, 0, INT8_MAX).astype(np.int8)
+
+
+def _softmax_q7_precise(x, in_frac: int):
+    xf = x.astype(np.float32) * np.float32(2.0 ** -in_frac)
+    xf = xf - xf.max(axis=-1, keepdims=True)
+    p = np.exp(xf)
+    p = p / p.sum(axis=-1, keepdims=True)
+    c = np.round(p.astype(np.float32) * 128.0)
+    return np.clip(c, 0, INT8_MAX).astype(np.int8)
+
+
+def _add_q7(a, b):
+    return _sat8(a.astype(np.int32) + b.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# op execution
+# ---------------------------------------------------------------------------
+def _run_conv(op: EdgeOp, x, rounding: str, relu_override=None):
+    a = op.attrs
+    acc = _conv2d_acc(x, op.weights["w"], a["stride"])
+    bias = op.weights["b"].astype(np.int32)
+    if a.get("bias_shift_per_channel"):
+        bs = np.asarray(a["bias_shift_per_channel"], np.int32)
+        bias = np.left_shift(bias, np.maximum(bs, 0))
+        bias = np.right_shift(bias, np.maximum(-bs, 0))
+        acc = acc + bias
+        y = _rshift_sat8_vec(acc, a["out_shift_per_channel"], rounding)
+    else:
+        bs = a["bias_shift"]
+        bias = np.left_shift(bias, bs) if bs >= 0 \
+            else np.right_shift(bias, -bs)
+        acc = acc + bias
+        y = _rshift_sat8(acc, a["out_shift"], rounding)
+    relu = a["relu"] if relu_override is None else relu_override
+    return np.maximum(y, 0).astype(np.int8) if relu else y
+
+
+def _run_primary_caps(op: EdgeOp, x, rounding: str):
+    a = op.attrs
+    y = _run_conv(op, x, rounding, relu_override=False)
+    u = y.reshape(y.shape[0], -1, a["dim"])
+    return _squash_q7(u, a["squash_in_frac"], a["squash_out_frac"])
+
+
+def _run_routing(op: EdgeOp, u, rounding: str):
+    a = op.attrs
+    W = op.weights["W"].astype(np.int32)
+    acc = np.einsum("jiod,bid->bjio", W, u.astype(np.int32),
+                    dtype=np.int32)
+    u_hat = _rshift_sat8(acc, a["uhat_shift"], rounding)
+
+    out_frac = a["squash_out_frac"]
+    softmax = _softmax_q7 if a["softmax_impl"] == "q7" \
+        else _softmax_q7_precise
+    b = np.zeros(u_hat.shape[:3], np.int8)
+    v = None
+    for r in range(a["routings"]):
+        c = softmax(b.swapaxes(1, 2), a["logit_frac"]).swapaxes(1, 2)
+        acc = np.einsum("bji,bjio->bjo", c.astype(np.int32),
+                        u_hat.astype(np.int32), dtype=np.int32)
+        s_q = _rshift_sat8(acc, a["caps_out_shifts"][r], rounding)
+        v = _squash_q7(s_q, a["caps_out_fracs"][r], out_frac)
+        if r < a["routings"] - 1:
+            acc = np.einsum("bjio,bjo->bji", u_hat.astype(np.int32),
+                            v.astype(np.int32), dtype=np.int32)
+            # agree_shifts assume a Q0.7 squash; compensate plan edits
+            # exactly like the jnp backend does
+            agr = _rshift_sat8(acc, a["agree_shifts"][r] + out_frac - 7,
+                               rounding)
+            b = _add_q7(b, agr)
+    return v
+
+
+_RUNNERS = {
+    "CONV_Q7": _run_conv,
+    "PRIMARY_CAPS_Q7": _run_primary_caps,
+    "CAPS_ROUTING_Q7": _run_routing,
+}
+
+
+class EdgeVM:
+    """Interpreter for one EdgeProgram.
+
+        vm = EdgeVM(lower(qnet))
+        v_q = vm.run(x_q)           # int8 [B, classes, caps_dim]
+
+    `run` accepts a single sample (the program's per-sample input shape)
+    or a batch with a leading axis, always as int8 already quantized to
+    the program's input format (use `quantize_input` for floats)."""
+
+    def __init__(self, program: EdgeProgram):
+        self.program = program
+
+    def quantize_input(self, x) -> np.ndarray:
+        q = np.round(np.asarray(x, np.float32)
+                     * (2.0 ** self.program.input_frac))
+        return np.clip(q, INT8_MIN, INT8_MAX).astype(np.int8)
+
+    def run(self, x_q: np.ndarray, *, trace: dict | None = None):
+        p = self.program
+        x_q = np.asarray(x_q)
+        if x_q.dtype != np.int8:
+            raise TypeError(f"EdgeVM.run wants int8 input in the "
+                            f"program's Q format, got {x_q.dtype}")
+        squeeze = x_q.shape == p.input_tensor.shape
+        h = x_q[None] if squeeze else x_q
+        if h.shape[1:] != p.input_tensor.shape:
+            raise ValueError(f"input shape {x_q.shape} does not match "
+                             f"program input {p.input_tensor.shape}")
+        for op in p.ops:
+            h = _RUNNERS[op.kind](op, h, p.rounding)
+            if trace is not None:
+                trace[op.name] = h
+        return h[0] if squeeze else h
+
+
+def execute(program: EdgeProgram, x_q) -> np.ndarray:
+    """One-shot convenience: EdgeVM(program).run(x_q)."""
+    return EdgeVM(program).run(x_q)

@@ -1,0 +1,72 @@
+"""Export a quantized CapsNet as a deployable MCU artifact.
+
+    PYTHONPATH=src python -m repro.launch.export_caps \
+        --model edge_tiny --out /tmp/e
+
+builds (or reuses) the model through the serving registry's lazy-PTQ
+path, lowers it to an EdgeProgram, and writes
+
+    <out>/<stem>.capsbin        single-file binary (weights + plan)
+    <out>/<stem>.manifest.json  human-readable IR manifest
+    <out>/<stem>.c / .h         CMSIS-NN-style sources
+
+then reloads the `.capsbin` from disk and re-verifies it in the NumPy
+q7 VM against the live model, bit for bit — export and proof in one
+command.  `--model` accepts a bare dataset name (mnist, smallnorb,
+cifar10, edge_tiny -> the @jnp spec) or a full registry id.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.edge import describe, format_export
+from repro.serving import ModelRegistry, default_specs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="edge_tiny",
+                    help="registry model id (mnist@jnp, ...) or bare "
+                    "dataset name (-> @jnp)")
+    ap.add_argument("--out", required=True, help="output directory")
+    ap.add_argument("--stem", default=None,
+                    help="artifact file stem (default: model id)")
+    ap.add_argument("--rounding", choices=("floor", "nearest"),
+                    default="floor")
+    ap.add_argument("--per-channel", action="store_true",
+                    help="per-output-channel conv weight formats "
+                    "(ConvPlan.w_frac_per_channel)")
+    ap.add_argument("--verify-n", type=int, default=4,
+                    help="images for the bit-exact VM re-verification "
+                    "(0 disables)")
+    args = ap.parse_args(argv)
+
+    model_id = args.model if "@" in args.model else f"{args.model}@jnp"
+    registry = ModelRegistry()
+    if model_id not in registry.specs:
+        print(f"[export_caps] unknown model {args.model!r}; have "
+              f"{sorted(default_specs())}", file=sys.stderr)
+        return 2
+    if args.rounding != "floor" or args.per_channel:
+        import dataclasses
+        spec = dataclasses.replace(registry.specs[model_id],
+                                   rounding=args.rounding,
+                                   per_channel=args.per_channel)
+        registry.register(spec)
+
+    print(f"[export_caps] model={model_id} rounding={args.rounding} "
+          f"per_channel={args.per_channel} -> {args.out}")
+    try:
+        result = registry.export(model_id, args.out, stem=args.stem,
+                                 verify_n=args.verify_n)
+    except AssertionError as e:      # verification failure is exit 1
+        print(f"[export_caps] VERIFY FAILED: {e}", file=sys.stderr)
+        return 1
+    print(describe(result["program"]))
+    print(format_export(result))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

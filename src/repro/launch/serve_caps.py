@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--compare-b1", action="store_true",
                     help="also serve via a batch-size-1 loop and report "
                     "the batched speedup")
+    ap.add_argument("--export", metavar="DIR", default=None,
+                    help="also dump the served model as an MCU artifact "
+                    "(.capsbin + manifest + .c/.h via repro.edge) and "
+                    "print the flash/RAM report")
     args = ap.parse_args()
 
     # serving waves shard over BATCH=("pod","data"): give "data" the
@@ -53,6 +57,11 @@ def main():
     registry.model(args.model)
     print(f"[serve_caps] lazy PTQ build: {time.perf_counter() - t0:.2f} s "
           f"({registry.model(args.model).memory_bytes() / 1000:.1f} KB int8)")
+    if args.export:
+        from repro.edge import format_export
+        result = registry.export(args.model, args.export)
+        print("[serve_caps] exported MCU artifact:")
+        print(format_export(result))
 
     engine, wall = serve_window(registry, buckets, images, args.model)
     print("[serve_caps]", engine.metrics.report())

@@ -26,6 +26,14 @@ class JnpBackend:
         return q.conv2d_q7(x, w, b, out_shift, bias_shift,
                            stride=stride, rounding=rounding)
 
+    def conv2d_q7_per_channel(self, x, w, b, out_shifts, bias_shifts, *,
+                              stride, rounding):
+        """Per-output-channel requantization (ConvPlan.per_channel).  The
+        conv itself is the same XLA int8 conv on every backend; only the
+        shift step becomes a table lookup, so Pallas inherits this."""
+        return q.conv2d_q7_per_channel(x, w, b, out_shifts, bias_shifts,
+                                       stride=stride, rounding=rounding)
+
     def relu_q7(self, x):
         return q.relu_q7(x)
 

@@ -65,6 +65,7 @@ class QuantConv2D:
     out_ch: int
     relu: bool = True
     init_scale_pow: float = 2.0     # he-normal: sqrt(init_scale_pow/fan_in)
+    per_channel: bool = False       # per-output-channel weight formats
 
     def init(self, key) -> dict:
         k, fan_in = self.kernel, self.kernel * self.kernel * self.in_ch
@@ -87,21 +88,45 @@ class QuantConv2D:
         f_w = _weight_frac(params["w"])
         f_b = _weight_frac(params["b"]) if params["b"].size else f_w
         f_out = qf.frac_bits(stats[f"{self.name}.out"])
+        pc_w = pc_out = pc_bias = ()
+        if self.per_channel:
+            # the channel formats come from the same derivation the
+            # quantizer uses (qformat.quantize_per_channel), so plan and
+            # weights cannot disagree
+            _, ns = qf.quantize_per_channel(params["w"], axis=-1)
+            pc_w = tuple(int(n) for n in ns)
+            pc_out = tuple(qf.out_shift(in_frac, f, f_out) for f in pc_w)
+            pc_bias = tuple(qf.bias_shift(in_frac, f, f_b) for f in pc_w)
         return ConvPlan(
             in_frac=in_frac, w_frac=f_w, b_frac=f_b, out_frac=f_out,
             out_shift=qf.out_shift(in_frac, f_w, f_out),
-            bias_shift=qf.bias_shift(in_frac, f_w, f_b))
+            bias_shift=qf.bias_shift(in_frac, f_w, f_b),
+            w_frac_per_channel=pc_w, out_shift_per_channel=pc_out,
+            bias_shift_per_channel=pc_bias)
 
     def quantize(self, params, plan: ConvPlan) -> dict:
-        return {"w": qf.quantize(params["w"], plan.w_frac),
-                "b": qf.quantize(params["b"], plan.b_frac)}
+        if plan.per_channel:
+            # quantize with the PLAN's channel formats (not a fresh
+            # derivation) so plan edits stay consistent with the shifts
+            # fwd_q7 will apply
+            qw = qf.quantize_with_fracs(params["w"],
+                                        plan.w_frac_per_channel, axis=-1)
+        else:
+            qw = qf.quantize(params["w"], plan.w_frac)
+        return {"w": qw, "b": qf.quantize(params["b"], plan.b_frac)}
 
     def fwd_q7(self, qweights, plan: ConvPlan, x, *, backend="jnp",
                rounding="floor"):
         be = get_backend(backend)
-        y = be.conv2d_q7(x, qweights["w"], qweights["b"], plan.out_shift,
-                         plan.bias_shift, stride=self.stride,
-                         rounding=rounding)
+        if plan.per_channel:
+            y = be.conv2d_q7_per_channel(
+                x, qweights["w"], qweights["b"],
+                plan.out_shift_per_channel, plan.bias_shift_per_channel,
+                stride=self.stride, rounding=rounding)
+        else:
+            y = be.conv2d_q7(x, qweights["w"], qweights["b"], plan.out_shift,
+                             plan.bias_shift, stride=self.stride,
+                             rounding=rounding)
         return be.relu_q7(y) if self.relu else y
 
 
@@ -118,6 +143,7 @@ class PrimaryCaps:
     in_ch: int
     caps: int
     dim: int
+    per_channel: bool = False
 
     @property
     def out_ch(self) -> int:
@@ -126,7 +152,8 @@ class PrimaryCaps:
     @property
     def conv(self) -> QuantConv2D:
         return QuantConv2D(self.name, self.kernel, self.stride, self.in_ch,
-                           self.out_ch, relu=False, init_scale_pow=1.0)
+                           self.out_ch, relu=False, init_scale_pow=1.0,
+                           per_channel=self.per_channel)
 
     def init(self, key) -> dict:
         return self.conv.init(key)

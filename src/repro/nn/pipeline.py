@@ -32,16 +32,18 @@ class CapsPipeline:
     # construction
     # ------------------------------------------------------------------
     @classmethod
-    def from_config(cls, cfg: CapsNetConfig,
-                    softmax_impl: str = "q7") -> "CapsPipeline":
+    def from_config(cls, cfg: CapsNetConfig, softmax_impl: str = "q7",
+                    per_channel: bool = False) -> "CapsPipeline":
         layers = []
         cin = cfg.input_shape[2]
         for i, (f, k, s) in enumerate(zip(cfg.conv_filters, cfg.conv_kernels,
                                           cfg.conv_strides)):
-            layers.append(QuantConv2D(f"conv{i}", k, s, cin, f, relu=True))
+            layers.append(QuantConv2D(f"conv{i}", k, s, cin, f, relu=True,
+                                      per_channel=per_channel))
             cin = f
         layers.append(PrimaryCaps("pcap", cfg.pcap_kernel, cfg.pcap_stride,
-                                  cin, cfg.pcap_caps, cfg.pcap_dim))
+                                  cin, cfg.pcap_caps, cfg.pcap_dim,
+                                  per_channel=per_channel))
         layers.append(CapsuleRouting(
             "caps", cfg.num_classes, cfg.num_input_caps, cfg.caps_dim,
             cfg.pcap_dim, cfg.routings, softmax_impl=softmax_impl))

@@ -31,13 +31,27 @@ class TapStats:
 @dataclasses.dataclass(frozen=True)
 class ConvPlan:
     """int8 conv: out_shift rescales the int32 accumulator into the
-    output format; bias_shift aligns the bias into the accumulator."""
+    output format; bias_shift aligns the bias into the accumulator.
+
+    Per-channel mode (opt-in, beyond-paper but still shift-only): each
+    output channel c gets its own weight format `w_frac_per_channel[c]`,
+    so the accumulator scale — and therefore out/bias shift — varies per
+    channel.  Empty tuples mean per-tensor (the paper's scheme); the
+    scalar fields always hold the per-tensor derivation so compat
+    translations keep working."""
     in_frac: int
     w_frac: int
     b_frac: int
     out_frac: int
     out_shift: int
     bias_shift: int
+    w_frac_per_channel: tuple = ()
+    out_shift_per_channel: tuple = ()
+    bias_shift_per_channel: tuple = ()
+
+    @property
+    def per_channel(self) -> bool:
+        return bool(self.w_frac_per_channel)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -82,6 +82,45 @@ def conv2d_q7(x, w, bias, out_shift: int, bias_shift: int,
     return rshift_sat8(acc, out_shift, rounding)
 
 
+def rshift_sat8_vec(acc, shifts, rounding: str = "floor"):
+    """rshift_sat8 with a per-lane shift array broadcast against the
+    accumulator's trailing axes (the per-channel requantization step).
+
+    Semantics per lane match the scalar path exactly: positive shifts
+    arithmetic-right-shift (nearest adds the half-LSB first), negative
+    shifts left-shift, then saturate to int8."""
+    acc = acc.astype(jnp.int32)
+    shifts = jnp.asarray(shifts, jnp.int32)
+    if rounding == "nearest":
+        half = jnp.left_shift(jnp.int32(1), jnp.maximum(shifts - 1, 0))
+        acc = acc + jnp.where(shifts > 0, half, 0)
+    acc = jnp.right_shift(acc, jnp.maximum(shifts, 0))
+    acc = jnp.left_shift(acc, jnp.maximum(-shifts, 0))
+    return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def conv2d_q7_per_channel(x, w, bias, out_shifts, bias_shifts,
+                          stride: int = 1, padding: str = "VALID",
+                          rounding: str = "floor"):
+    """conv2d_q7 with per-output-channel weight formats: the accumulator
+    for channel c carries in_frac + w_frac[c] fractional bits, so both
+    the bias alignment and the output requantization are per-channel
+    shift tables (still power-of-two — MCU cost is one extra q7 table).
+    """
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    if bias is not None:
+        b = bias.astype(jnp.int32)
+        bs = jnp.asarray(bias_shifts, jnp.int32)
+        b = jnp.left_shift(b, jnp.maximum(bs, 0))
+        b = jnp.right_shift(b, jnp.maximum(-bs, 0))
+        acc = acc + b
+    return rshift_sat8_vec(acc, out_shifts, rounding)
+
+
 def relu_q7(x):
     return jnp.maximum(x, 0).astype(jnp.int8)
 

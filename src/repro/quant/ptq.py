@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core import capsnet as C
 from repro.core.capsnet_q7 import QCapsNet
 from repro.nn import compat
-from repro.nn.pipeline import QuantCapsNet
+from repro.nn.pipeline import CapsPipeline, QuantCapsNet
 from repro.quant import qformat as qf
 
 
@@ -50,10 +50,11 @@ def quantize_capsnet(params, cfg, calib_images, *,
     Returns the legacy string-keyed QCapsNet; `quantize_pipeline` returns
     the typed equivalent."""
     if per_channel:
-        raise NotImplementedError(
-            "per-channel PTQ is a planned plan-field extension (see "
-            "ROADMAP); qformat.quantize_per_channel exists but no layer "
-            "plan carries per-channel shifts yet")
+        raise ValueError(
+            "per-channel shift tables are tuples and have no legacy "
+            "string-keyed representation; use quantize_pipeline(..., "
+            "per_channel=True) for the typed ConvPlan.w_frac_per_channel "
+            "path")
     qnet = quantize_pipeline(params, cfg, calib_images, rounding=rounding)
     return QCapsNet(cfg=cfg, weights=qnet.qweights,
                     shifts=compat.plan_to_shifts(qnet.plan),
@@ -62,10 +63,17 @@ def quantize_capsnet(params, cfg, calib_images, *,
 
 def quantize_pipeline(params, cfg, calib_images, *,
                       rounding: str = "floor",
-                      backend: str = "jnp") -> QuantCapsNet:
-    """The typed path: per-layer plans, no string keys."""
-    return C.pipeline(cfg).quantize(params, calib_images,
-                                    rounding=rounding, backend=backend)
+                      backend: str = "jnp",
+                      per_channel: bool = False) -> QuantCapsNet:
+    """The typed path: per-layer plans, no string keys.
+
+    per_channel=True re-derives the pipeline with per-output-channel conv
+    weight formats (ConvPlan.w_frac_per_channel); params initialized for
+    the per-tensor pipeline are layout-compatible."""
+    pipe = CapsPipeline.from_config(cfg, per_channel=True) if per_channel \
+        else C.pipeline(cfg)
+    return pipe.quantize(params, calib_images,
+                         rounding=rounding, backend=backend)
 
 
 def quantize_input(x, frac: int = 7):

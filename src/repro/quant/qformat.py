@@ -50,15 +50,24 @@ def dequantize(q, n: int):
     return jnp.asarray(q, jnp.float32) * (2.0 ** -n)
 
 
+def quantize_with_fracs(x, ns, axis: int):
+    """float -> int8 with a per-slice fractional-bit table along `axis`
+    (the quantization step of the per-channel scheme, for fracs that
+    were already derived — e.g. carried by a ConvPlan)."""
+    x = np.asarray(x, np.float32)
+    ns = np.asarray(ns, np.int32)
+    moved = np.moveaxis(x, axis, 0)
+    scale = (2.0 ** ns).reshape((-1,) + (1,) * (moved.ndim - 1))
+    q = np.clip(np.round(moved * scale), INT8_MIN, INT8_MAX).astype(np.int8)
+    return jnp.asarray(np.moveaxis(q, 0, axis))
+
+
 def quantize_per_channel(x, axis: int):
     """Beyond-paper: per-output-channel power-of-two scales (still
     shift-only in hardware).  Returns (int8 array, n per channel [int32])."""
-    x = np.asarray(x, np.float32)
-    moved = np.moveaxis(x, axis, 0)
+    moved = np.moveaxis(np.asarray(x, np.float32), axis, 0)
     ns = np.array([frac_bits(np.abs(c).max()) for c in moved], np.int32)
-    scale = (2.0 ** ns).reshape((-1,) + (1,) * (moved.ndim - 1))
-    q = np.clip(np.round(moved * scale), INT8_MIN, INT8_MAX).astype(np.int8)
-    return jnp.asarray(np.moveaxis(q, 0, axis)), jnp.asarray(ns)
+    return quantize_with_fracs(x, ns, axis), jnp.asarray(ns)
 
 
 @dataclasses.dataclass(frozen=True)

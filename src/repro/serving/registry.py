@@ -52,6 +52,7 @@ class ModelSpec:
     calib_n: int = 32
     seed: int = 0
     softmax_impl: str = "q7"
+    per_channel: bool = False        # per-output-channel conv PTQ
 
     def images(self, n: int, seed: int) -> np.ndarray:
         """n request/calibration images matching the config's geometry
@@ -64,7 +65,8 @@ class ModelSpec:
 
     def build(self) -> QuantCapsNet:
         pipe = CapsPipeline.from_config(self.config,
-                                        softmax_impl=self.softmax_impl)
+                                        softmax_impl=self.softmax_impl,
+                                        per_channel=self.per_channel)
         params = pipe.init(jax.random.key(self.seed))
         calib = jnp.asarray(self.images(self.calib_n, self.seed + 1))
         return pipe.quantize(params, calib, rounding=self.rounding,
@@ -137,6 +139,27 @@ class ModelRegistry:
     # ------------------------------------------------------------------
     # compiled wave executables
     # ------------------------------------------------------------------
+    def export(self, model_id: str, out_dir, *, stem: str | None = None,
+               verify_n: int = 4) -> dict:
+        """Dump a served model as an MCU artifact (repro.edge): lower the
+        QuantCapsNet to an EdgeProgram, write `.capsbin` + manifest +
+        CMSIS-NN-style `.c/.h`, and re-verify the reloaded binary in the
+        NumPy VM against the live model on `verify_n` images."""
+        from repro.edge import export_artifacts
+        qnet = self.model(model_id)
+        images = None
+        if verify_n > 0:
+            spec = self.specs.get(model_id)
+            if spec is not None:
+                images = spec.images(verify_n, seed=99)
+            else:                    # install()ed model: synthetic probes
+                rng = np.random.default_rng(99)
+                shape = (verify_n,) + self.input_shape(model_id)
+                images = rng.uniform(0, 1, shape).astype(np.float32)
+        stem = stem or model_id.replace("@", "_")
+        return export_artifacts(qnet, out_dir, stem=stem,
+                                verify_images=images)
+
     def executable(self, model_id: str, bucket: int) -> sharded.CompiledWave:
         key = (model_id, bucket)
         if key in self._execs:

@@ -1,0 +1,29 @@
+"""Regenerate the C-emitter golden files after an INTENTIONAL emitter
+change:
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+then review the diff of tests/golden/golden_caps.{c,h} like any other
+code change — the golden test exists to make emitter drift visible.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from test_edge import golden_program  # noqa: E402
+
+from repro.edge import emit_c  # noqa: E402
+
+
+def main():
+    out = pathlib.Path(__file__).parent
+    src = emit_c(golden_program())
+    for ext in ("c", "h"):
+        path = out / f"golden_caps.{ext}"
+        path.write_text(src[ext] + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Tests for the MCU export compiler (repro.edge).
+
+Core guarantees:
+  * the NumPy q7 VM executes `lower(qnet)` bit-identically to
+    `QuantCapsNet.forward` for all three paper configs + edge_tiny and
+    both rounding modes (and for per-channel conv plans);
+  * `.capsbin` serialize -> load round-trips the program and its
+    execution exactly;
+  * the arena planner never overlaps live tensors and always beats the
+    naive sum-of-activations allocation;
+  * the C emitter is deterministic (golden files);
+  * the exported memory report reproduces the paper's Table 2 footprint
+    story (>= 70 % total reduction vs fp32).
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capsnet as C
+from repro.edge import (EdgeOp, EdgeProgram, EdgeVM, TensorSpec,
+                        assign_offsets, emit_c, lifetimes, lower,
+                        memory_report, plan_arena)
+from repro.nn.pipeline import CapsPipeline
+from repro.quant import ptq
+from repro.serving import EDGE_TINY, ModelRegistry
+
+CONFIGS = dict(C.CAPSNET_CONFIGS, capsnet_edge_tiny=EDGE_TINY)
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+_cache = {}
+
+
+def built(name, rounding="floor", per_channel=False):
+    """Quantized net + probe inputs, cached across tests (PTQ is the
+    expensive part; every edge test reuses the same builds)."""
+    key = (name, rounding, per_channel)
+    if key not in _cache:
+        cfg = CONFIGS[name]
+        pipe = CapsPipeline.from_config(cfg, per_channel=per_channel)
+        params = pipe.init(jax.random.key(0))
+        rng = np.random.default_rng(7)
+        calib = jnp.asarray(
+            rng.uniform(0, 1, (16,) + cfg.input_shape).astype(np.float32))
+        x = jnp.asarray(
+            rng.uniform(0, 1, (2,) + cfg.input_shape).astype(np.float32))
+        qnet = pipe.quantize(params, calib, rounding=rounding)
+        _cache[key] = (qnet, np.asarray(qnet.quantize_input(x)))
+    return _cache[key]
+
+
+# ---------------------------------------------------------------------------
+# VM bit-parity (the subsystem's core contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rounding", ["floor", "nearest"])
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_vm_bit_identical_to_host(name, rounding):
+    qnet, x_q = built(name, rounding)
+    program = lower(qnet)
+    assert program.rounding == rounding
+    v_vm = EdgeVM(program).run(x_q)
+    v_host = np.asarray(qnet.forward(jnp.asarray(x_q)))
+    assert v_vm.dtype == np.int8
+    np.testing.assert_array_equal(v_vm, v_host)
+
+
+def test_vm_per_channel_bit_identical():
+    """Per-channel conv plans lower to shift tables the VM honours."""
+    qnet, x_q = built("capsnet_edge_tiny", "nearest", per_channel=True)
+    program = lower(qnet)
+    conv = program.ops[0]
+    assert conv.attrs["out_shift_per_channel"], "per-channel table missing"
+    assert len(conv.attrs["out_shift_per_channel"]) == conv.attrs["out_ch"]
+    np.testing.assert_array_equal(
+        EdgeVM(program).run(x_q), np.asarray(qnet.forward(jnp.asarray(x_q))))
+
+
+def test_vm_single_sample_and_bad_input():
+    qnet, x_q = built("capsnet_edge_tiny")
+    vm = EdgeVM(lower(qnet))
+    batched = vm.run(x_q)
+    single = vm.run(x_q[0])
+    assert single.shape == batched.shape[1:]
+    np.testing.assert_array_equal(single, batched[0])
+    with pytest.raises(TypeError):
+        vm.run(x_q.astype(np.float32))
+    with pytest.raises(ValueError):
+        vm.run(x_q[:, :4])
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip
+# ---------------------------------------------------------------------------
+def test_capsbin_round_trip(tmp_path):
+    qnet, x_q = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    paths = program.save(tmp_path / "m")
+    reloaded = EdgeProgram.load(paths["capsbin"])
+    assert program.same_as(reloaded) and reloaded.same_as(program)
+    np.testing.assert_array_equal(EdgeVM(program).run(x_q),
+                                  EdgeVM(reloaded).run(x_q))
+    # the side-car manifest is the same header the binary embeds
+    manifest = json.loads(paths["manifest"].read_text())
+    assert manifest == program.header() == reloaded.header()
+
+
+def test_capsbin_rejects_garbage(tmp_path):
+    p = tmp_path / "x.capsbin"
+    p.write_bytes(b"not a capsbin at all")
+    with pytest.raises(ValueError, match="not a capsbin"):
+        EdgeProgram.load(p)
+
+
+# ---------------------------------------------------------------------------
+# arena planner properties
+# ---------------------------------------------------------------------------
+def _check_no_overlap(blocks, offsets):
+    for i, (ka, sa, (s0, e0)) in enumerate(blocks):
+        for kb, sb, (s1, e1) in blocks[i + 1:]:
+            if e0 < s1 or e1 < s0:
+                continue            # disjoint lifetimes may share bytes
+            a, b = offsets[ka], offsets[kb]
+            assert a + sa <= b or b + sb <= a, \
+                f"live blocks {ka} and {kb} overlap"
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_arena_plan_properties(name):
+    qnet, _ = built(name)
+    program = lower(qnet)
+    plan = plan_arena(program)
+    life = lifetimes(program)
+    # tid 0 is the caller's input buffer: never arena-allocated
+    assert 0 not in plan.offsets
+    blocks = [(tid, program.tensor(tid).nbytes, life[tid])
+              for tid in life if tid != 0]
+    _check_no_overlap(blocks, plan.offsets)
+    assert plan.arena_bytes <= plan.naive_bytes
+    # liveness must actually buy something on a >=3-op schedule
+    assert plan.arena_bytes < plan.naive_bytes
+    assert plan.arena_bytes >= max(size for _, size, _ in blocks)
+
+
+def test_arena_allocator_random_blocks():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(
+        st.tuples(st.integers(1, 500),
+                  st.tuples(st.integers(0, 9), st.integers(0, 9))),
+        min_size=1, max_size=24))
+    @hyp.settings(deadline=None, max_examples=60)
+    def run(raw):
+        blocks = [(i, size, (min(a, b), max(a, b)))
+                  for i, (size, (a, b)) in enumerate(raw)]
+        offsets = assign_offsets(blocks)
+        _check_no_overlap(blocks, offsets)
+        peak = max(offsets[k] + s for k, s, _ in blocks)
+        assert peak <= sum(s for _, s, _ in blocks)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# memory report (paper Table 2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(C.CAPSNET_CONFIGS))
+def test_memory_report_footprint(name):
+    qnet, _ = built(name)
+    report = memory_report(lower(qnet))
+    assert report["saving_pct"] >= 70.0          # Table 2 ballpark
+    assert report["arena_bytes"] < report["naive_act_bytes"]
+    # flash agrees with the typed container's own accounting to within
+    # the (few-dozen-scalar) difference in table bookkeeping
+    assert abs(report["flash_bytes"] - qnet.memory_bytes()) < 512
+
+
+# ---------------------------------------------------------------------------
+# C emitter (golden files)
+# ---------------------------------------------------------------------------
+def golden_program() -> EdgeProgram:
+    """Deterministic hand-built program (no RNG, no jax) so the golden
+    files pin the emitter, not the initializer."""
+    def arr(shape, dtype=np.int8, lo=-90):
+        n = int(np.prod(shape))
+        return (np.arange(n, dtype=np.int32) * 37 % 181 + lo) \
+            .astype(dtype).reshape(shape)
+
+    tensors = (
+        TensorSpec(0, "input", (8, 8, 1), 7),
+        TensorSpec(1, "conv0.out", (6, 6, 4), 5),
+        TensorSpec(2, "pcap.caps", (8, 2), 7),
+        TensorSpec(3, "caps.v", (2, 2), 7),
+    )
+    conv = EdgeOp("CONV_Q7", "conv0", (0,), 1, {
+        "kernel": 3, "stride": 1, "in_ch": 1, "out_ch": 4, "relu": True,
+        "in_frac": 7, "w_frac": 7, "b_frac": 8, "out_frac": 5,
+        "out_shift": 9, "bias_shift": 6,
+        "w_frac_per_channel": (7, 8, 7, 7),
+        "out_shift_per_channel": (9, 10, 9, 9),
+        "bias_shift_per_channel": (6, 7, 6, 6),
+    }, {"w": arr((3, 3, 1, 4)), "b": arr((4,))})
+    pcap = EdgeOp("PRIMARY_CAPS_Q7", "pcap", (1,), 2, {
+        "kernel": 3, "stride": 2, "in_ch": 4, "out_ch": 4, "relu": False,
+        "in_frac": 5, "w_frac": 7, "b_frac": 8, "out_frac": 6,
+        "out_shift": 6, "bias_shift": 4, "caps": 2, "dim": 2,
+        "squash_in_frac": 6, "squash_out_frac": 7,
+    }, {"w": arr((3, 3, 4, 4)), "b": arr((4,))})
+    caps = EdgeOp("CAPS_ROUTING_Q7", "caps", (2,), 3, {
+        "num_out": 2, "num_in": 8, "out_dim": 2, "in_dim": 2,
+        "routings": 2, "in_frac": 7, "W_frac": 7, "uhat_frac": 7,
+        "uhat_shift": 7, "logit_frac": 7,
+        "caps_out_shifts": (5, 5), "caps_out_fracs": (9, 9),
+        "agree_shifts": (7,), "softmax_impl": "q7",
+        "squash_out_frac": 7,
+    }, {"W": arr((2, 8, 2, 2))})
+    return EdgeProgram(name="golden_caps", rounding="floor",
+                       input_frac=7, tensors=tensors,
+                       ops=(conv, pcap, caps))
+
+
+def test_emit_c_matches_golden():
+    src = emit_c(golden_program())
+    for ext in ("c", "h"):
+        golden = (GOLDEN_DIR / f"golden_caps.{ext}").read_text()
+        assert src[ext] + "\n" == golden, \
+            (f"emitted .{ext} drifted from tests/golden/golden_caps.{ext}; "
+             "if the change is intentional, regenerate with "
+             "tests/golden/regen.py")
+
+
+def test_golden_program_runs_in_vm():
+    program = golden_program()
+    x = (np.arange(64, dtype=np.int32) % 201 - 100).astype(np.int8)
+    v = EdgeVM(program).run(x.reshape(8, 8, 1))
+    assert v.shape == (2, 2) and v.dtype == np.int8
+
+
+# ---------------------------------------------------------------------------
+# export path + per-channel satellite
+# ---------------------------------------------------------------------------
+def test_registry_export(tmp_path):
+    result = ModelRegistry().export("edge_tiny@jnp", tmp_path)
+    for p in result["paths"].values():
+        assert p.exists() and p.stat().st_size > 0
+    assert result["verified"] == 4
+    assert {p.suffix for p in result["paths"].values()} == \
+        {".capsbin", ".json", ".c", ".h"}
+
+
+def test_tampered_capsbin_is_detected(tmp_path):
+    """Weight-blob corruption cannot survive `same_as` — the equality
+    export verification relies on really covers the payload bits."""
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    paths = program.save(tmp_path / "m")
+    blob = bytearray(paths["capsbin"].read_bytes())
+    blob[-3] ^= 0x55                 # flip bits inside the last weight
+    paths["capsbin"].write_bytes(bytes(blob))
+    assert not program.same_as(EdgeProgram.load(paths["capsbin"]))
+
+
+def test_per_channel_plan_fields_and_error_message():
+    qnet, _ = built("capsnet_edge_tiny", per_channel=True)
+    plan = qnet.plan["conv0"]
+    assert plan.per_channel
+    assert len(plan.w_frac_per_channel) == 8
+    assert plan.out_shift_per_channel == tuple(
+        plan.in_frac + f - plan.out_frac for f in plan.w_frac_per_channel)
+    # the legacy string-keyed container cannot carry tuple tables; the
+    # error now points at the typed path instead of claiming no layer
+    # supports per-channel
+    cfg = EDGE_TINY
+    params = CapsPipeline.from_config(cfg).init(jax.random.key(0))
+    calib = jnp.ones((2,) + cfg.input_shape)
+    with pytest.raises(ValueError, match="quantize_pipeline"):
+        ptq.quantize_capsnet(params, cfg, calib, per_channel=True)
+
+
+def test_per_channel_plan_edit_reaches_quantize():
+    """Regression: quantize() must use the PLAN's channel formats, not a
+    fresh derivation — an edited w_frac_per_channel changes the weights
+    consistently with the shifts fwd_q7 applies."""
+    import dataclasses
+
+    qnet, _ = built("capsnet_edge_tiny", per_channel=True)
+    layer = qnet.pipeline.layer("conv0")
+    params = CapsPipeline.from_config(
+        EDGE_TINY, per_channel=True).init(jax.random.key(0))["conv0"]
+    plan = qnet.plan["conv0"]
+    edited = dataclasses.replace(
+        plan,
+        w_frac_per_channel=tuple(f - 1 for f in plan.w_frac_per_channel))
+    w_base = np.asarray(layer.quantize(params, plan)["w"], np.int32)
+    w_edit = np.asarray(layer.quantize(params, edited)["w"], np.int32)
+    assert not np.array_equal(w_base, w_edit)
+    # one fewer fractional bit == halved codes (up to rounding)
+    np.testing.assert_allclose(w_edit, w_base / 2, atol=0.5)
+
+
+def test_per_channel_weights_reconstruct_no_worse():
+    """Per-channel formats can only tighten the weight grid (channel max
+    <= tensor max), so reconstruction error must not regress."""
+    qnet_pt, _ = built("capsnet_edge_tiny")
+    qnet_pc, _ = built("capsnet_edge_tiny", per_channel=True)
+    w = np.asarray(
+        CapsPipeline.from_config(EDGE_TINY).init(jax.random.key(0))
+        ["conv0"]["w"])
+    pt = qnet_pt.plan["conv0"]
+    pc = qnet_pc.plan["conv0"]
+    err_pt = np.mean((w - np.asarray(qnet_pt.qweights["conv0"]["w"],
+                                     np.float32) * 2.0 ** -pt.w_frac) ** 2)
+    ns = np.asarray(pc.w_frac_per_channel, np.float32)
+    err_pc = np.mean((w - np.asarray(qnet_pc.qweights["conv0"]["w"],
+                                     np.float32) * 2.0 ** -ns) ** 2)
+    assert err_pc <= err_pt + 1e-12
