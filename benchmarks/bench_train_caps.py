@@ -1,0 +1,59 @@
+"""Capsule training benchmark: float vs fake-quant (QAT) step cost, and
+the Table-2 accuracy harness as a measured artifact.
+
+The paper trains in the cloud and ships int8 to the MCU; the training
+subsystem's cost question is what QAT adds on top of a float step —
+every tensor the int8 graph quantizes gains a fake-quant snap
+(`qformat.fake_quant`), so the fwd/bwd graph roughly doubles its
+elementwise work while the matmuls stay identical.  Rows:
+
+  train_step_float_*   us per optimizer step, float pipeline
+  train_step_qat_*     us per optimizer step, fake-quant on a live plan
+  train_accuracy_*     the evalq harness: float/ptq/qat accuracy and the
+                       float-vs-int8 deltas per rounding mode (derived
+                       column; the repo's Table-2 accuracy reproduction)
+
+Smoke mode runs a few steps of edge_tiny only (CI bit-rot check);
+the full run adds the paper's MNIST "L" geometry step costs.
+"""
+from benchmarks import util
+from benchmarks.util import csv_row, time_call
+from repro.captrain import CapsTrainer, TrainConfig, table2_rows
+from repro.nn.config import MNIST
+from repro.serving.registry import EDGE_TINY
+
+
+def _step_cost(cfg, tcfg):
+    trainer = CapsTrainer(cfg, tcfg)
+    state = trainer.init_state()
+    x, y = trainer.task.batch(0, tcfg.batch)
+    plan = trainer.derive_plan(state)
+
+    us = time_call(lambda: trainer.train_step(state, x, y))
+    csv_row(f"train_step_float_{cfg.name}", us,
+            f"{tcfg.batch * 1e6 / us:.1f}img/s")
+    us_q = time_call(lambda: trainer.train_step(state, x, y, plan))
+    csv_row(f"train_step_qat_{cfg.name}", us_q,
+            f"{tcfg.batch * 1e6 / us_q:.1f}img/s_overhead="
+            f"{us_q / us:.2f}x")
+
+
+def main():
+    tiny = TrainConfig(dataset="edge_tiny", batch=32, calib_n=16)
+    _step_cost(EDGE_TINY, tiny)
+    if not util.SMOKE:
+        _step_cost(MNIST, TrainConfig(dataset="mnist", batch=32,
+                                      calib_n=16))
+
+    f_steps, q_steps, eval_n = (8, 4, 64) if util.SMOKE else (150, 40, 512)
+    rows = table2_rows(EDGE_TINY, tiny, float_steps=f_steps,
+                       qat_steps=q_steps, eval_n=eval_n)
+    for r in rows:
+        csv_row(f"train_accuracy_{r.name}_{r.rounding}", 0.0,
+                f"f32={r.acc_f32:.4f}_ptq={r.acc_ptq:.4f}"
+                f"_qat={r.acc_qat:.4f}_dptq={r.delta_ptq:.4f}"
+                f"_dqat={r.delta_qat:.4f}_saving={r.saving_pct:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ Sections (one per paper table):
                                     unfused vs fused-VMEM kernel)
 beyond-paper:
   serving    -> bench_serving      (batched engine vs batch-1 loop)
+  training   -> bench_train_caps   (float vs QAT step cost, Table-2
+                                    accuracy deltas via repro.captrain)
 plus the roofline summary from the dry-run artifacts (if present).
 
 CPU wall-clock is the validation substrate (interpret-mode kernels); the
@@ -28,7 +30,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_capsule_layer, bench_edge_vm,
                             bench_matmul, bench_primary_caps,
-                            bench_quantization, bench_serving)
+                            bench_quantization, bench_serving,
+                            bench_train_caps)
     print("# --- Table 2: quantization framework ---")
     bench_quantization.main()
     print("# --- Tables 3/4: int8 matmul variants ---")
@@ -41,6 +44,8 @@ def main() -> None:
     bench_serving.main()
     print("# --- Edge export: q7 VM + arena plan ---")
     bench_edge_vm.main()
+    print("# --- Training: float vs QAT steps + Table-2 accuracy ---")
+    bench_train_caps.main()
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():

@@ -1,14 +1,18 @@
-"""End-to-end CapsNet driver: train (float) for a few hundred steps, then
-post-training-quantize and reproduce the paper's Table 2 —
-memory-footprint saving and float-vs-int8 accuracy delta.
+"""End-to-end CapsNet driver on the typed training subsystem: train
+(float) with `repro.captrain.CapsTrainer`, then reproduce the paper's
+Table 2 — memory-footprint saving and float-vs-int8 accuracy delta —
+for plain PTQ and for QAT fine-tuning.
 
     PYTHONPATH=src python examples/train_capsnet.py --dataset mnist --steps 250
-    PYTHONPATH=src python examples/train_capsnet.py --dataset smallnorb
+    PYTHONPATH=src python examples/train_capsnet.py --dataset edge_tiny \
+        --steps 120 --qat-steps 40
     PYTHONPATH=src python examples/train_capsnet.py --dataset cifar10
 
 Both rounding modes are reported: "floor" is the paper/CMSIS `>> shift`
-truncation; "nearest" adds the half-LSB (beyond-paper; see EXPERIMENTS.md
-for why truncation bias amplifies through the 1024-capsule coupling sum).
+truncation; "nearest" adds the half-LSB (beyond-paper; truncation bias
+amplifies through the 1024-capsule coupling sum, which is also why QAT
+under floor rounding recovers the most accuracy — see
+src/repro/captrain/README.md for the harness docs).
 """
 import sys
 sys.path.insert(0, "src")
@@ -16,75 +20,44 @@ sys.path.insert(0, "src")
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.captrain import TrainConfig, format_rows, table2_rows
+from repro.nn.config import CIFAR10, MNIST, SMALLNORB
+from repro.serving.registry import EDGE_TINY
 
-from repro.core import capsnet as C
-from repro.data.synthetic import make_image_dataset
-from repro.optim.adam import AdamW
-from repro.quant import ptq
-
-DATASETS = {"mnist": C.MNIST, "smallnorb": C.SMALLNORB,
-            "cifar10": C.CIFAR10}
+DATASETS = {"mnist": MNIST, "smallnorb": SMALLNORB, "cifar10": CIFAR10,
+            "edge_tiny": EDGE_TINY}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=list(DATASETS), default="mnist")
-    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--steps", type=int, default=250,
+                    help="float training steps")
+    ap.add_argument("--qat-steps", type=int, default=60,
+                    help="fake-quant fine-tuning steps per rounding mode")
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--eval-n", type=int, default=768)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="override the config's learning rate")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint/resume directory (repro.ckpt)")
     args = ap.parse_args()
 
     cfg = DATASETS[args.dataset]
-    print(f"== {cfg.name}  (paper Table 1 config; input "
-          f"{cfg.input_shape}, {cfg.num_input_caps} input capsules)")
-    params = C.init_capsnet(jax.random.key(0), cfg)
-    opt = AdamW(lr=cfg.lr, clip_norm=0.0, weight_decay=0.0)
-    state = opt.init(params)
-
-    @jax.jit
-    def step(params, state, x, y):
-        def loss_fn(p):
-            v = C.capsnet_forward(p, x, cfg)
-            return C.margin_loss(v, y, cfg.num_classes), v
-        (loss, v), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        params, state, _ = opt.update(g, state, params)
-        return params, state, loss, C.accuracy(v, y)
+    tcfg = TrainConfig(
+        dataset=args.dataset, batch=args.batch,
+        lr=args.lr if args.lr is not None else cfg.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50 if args.ckpt_dir else 0)
+    print(f"== {cfg.name}  (input {cfg.input_shape}, "
+          f"{cfg.num_input_caps} input capsules)")
 
     t0 = time.time()
-    for i in range(args.steps):
-        x, y = make_image_dataset(args.dataset, args.batch, seed=i)
-        params, state, loss, acc = step(params, state, jnp.asarray(x),
-                                        jnp.asarray(y))
-        if i % 25 == 0 or i == args.steps - 1:
-            print(f"  step {i:4d}: loss={float(loss):.4f} "
-                  f"acc={float(acc):.3f}  ({time.time()-t0:.0f}s)")
-
-    # --- evaluation: Table 2 analogue -------------------------------------
-    tx, ty = make_image_dataset(args.dataset, args.eval_n, seed=999_999)
-    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
-    calib = jnp.asarray(
-        make_image_dataset(args.dataset, 256, seed=555_555)[0])
-
-    acc_f = ptq.eval_float(params, cfg, tx, ty)
-    rows = []
-    for rounding in ("floor", "nearest"):
-        qm = ptq.quantize_capsnet(params, cfg, calib, rounding=rounding)
-        acc_q = ptq.eval_q7(qm, tx, ty)
-        rep = ptq.footprint_report(params, qm)
-        rows.append((rounding, acc_q, rep))
-
-    print(f"\n  {'':14s}{'fp32':>10s}{'int8/floor':>12s}{'int8/nearest':>14s}")
-    print(f"  {'accuracy':14s}{acc_f:10.4f}{rows[0][1]:12.4f}"
-          f"{rows[1][1]:14.4f}")
-    print(f"  {'acc loss':14s}{'-':>10s}{acc_f-rows[0][1]:12.4f}"
-          f"{acc_f-rows[1][1]:14.4f}")
-    rep = rows[1][2]
-    print(f"  footprint: {rep['fp32_kb']:.2f} KB -> {rep['int8_kb']:.2f} KB"
-          f"  (saving {rep['saving_pct']:.2f} %; paper: 74.99 %)")
-    print(f"  paper accuracy-loss band: 0.07 % – 0.18 %")
+    rows = table2_rows(cfg, tcfg, float_steps=args.steps,
+                       qat_steps=args.qat_steps, eval_n=args.eval_n,
+                       log=print)
+    print(f"\n== Table 2 analogue ({time.time() - t0:.0f}s)")
+    print(format_rows(rows))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Quantization-aware capsule training subsystem (see README.md here).
+
+CapsTrainer (margin + reconstruction loss, AdamW, ckpt/resume) over the
+typed `repro.nn` pipeline; fake-quant QAT on the exact plans PTQ
+derives; deterministic tree-reduced data-parallel steps; the Table-2
+float-vs-int8 accuracy harness.
+"""
+from repro.captrain.decoder import ReconDecoder  # noqa: F401
+from repro.captrain.evalq import (Table2Row, eval_float,  # noqa: F401
+                                  eval_q7, format_rows, table2_rows)
+from repro.captrain.losses import (accuracy, accuracy_count,  # noqa: F401
+                                   class_lengths, margin_loss,
+                                   predictions)
+from repro.captrain.steps import (make_train_step,  # noqa: F401
+                                  pairwise_reduce, tree_pairwise_mean)
+from repro.captrain.trainer import CapsTrainer, TrainConfig  # noqa: F401

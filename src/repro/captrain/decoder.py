@@ -1,0 +1,67 @@
+"""Reconstruction-decoder regularizer (paper §3.1 / Sabour et al. §4.1).
+
+The class capsules are masked to the true class and decoded back to the
+input image through a small fully-connected stack; the summed-squared
+reconstruction error, scaled way down (0.0005 per pixel in the paper's
+setup), regularizes the capsule lengths without dominating the margin
+loss.  The decoder trains alongside the pipeline but is NOT part of the
+deployed model: `CapsTrainer` keeps its params in a separate branch of
+the train state, so `CapsPipeline.quantize` / `repro.edge.lower` never
+see it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconDecoder:
+    """FC(h0) relu -> FC(h1) relu -> FC(H*W*C) sigmoid over the masked
+    class capsules.  The paper uses (512, 1024) for the 28x28 nets;
+    configs here default smaller and scale with the image."""
+    num_classes: int
+    caps_dim: int
+    image_shape: tuple                   # (H, W, C)
+    hidden: tuple = (64, 128)
+
+    @property
+    def in_dim(self) -> int:
+        return self.num_classes * self.caps_dim
+
+    @property
+    def out_dim(self) -> int:
+        h, w, c = self.image_shape
+        return h * w * c
+
+    def init(self, key) -> dict:
+        dims = (self.in_dim,) + tuple(self.hidden) + (self.out_dim,)
+        params = {}
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            params[f"fc{i}"] = {
+                "w": jax.random.normal(sub, (din, dout), jnp.float32)
+                * (2.0 / din) ** 0.5,
+                "b": jnp.zeros((dout,), jnp.float32),
+            }
+        return params
+
+    def apply(self, params, v, labels):
+        """v [B,J,O] class capsules + labels [B] -> reconstruction
+        [B,H,W,C] in [0,1]."""
+        mask = jax.nn.one_hot(labels, self.num_classes, dtype=v.dtype)
+        h = (v * mask[:, :, None]).reshape(v.shape[0], -1)
+        n_fc = len(self.hidden) + 1
+        for i in range(n_fc):
+            p = params[f"fc{i}"]
+            h = h @ p["w"] + p["b"]
+            if i < n_fc - 1:
+                h = jax.nn.relu(h)
+        return jax.nn.sigmoid(h).reshape((v.shape[0],) + self.image_shape)
+
+    def loss(self, params, v, labels, x):
+        """Mean (over batch) summed-squared reconstruction error."""
+        recon = self.apply(params, v, labels)
+        return jnp.mean(jnp.sum(jnp.square(recon - x), axis=(1, 2, 3)))

@@ -1,0 +1,128 @@
+"""Table-2 accuracy harness: train -> PTQ -> QAT -> float-vs-int8 delta.
+
+The paper's headline claim is that Qm.n power-of-two quantization costs
+only 0.07-0.18 % accuracy next to its 75 % memory cut (Table 2).  This
+module is the repo's first end-to-end measurement of that delta — and of
+what fake-quant training recovers when plain PTQ isn't enough:
+
+    rows = table2_rows(EDGE_TINY, TrainConfig(dataset="edge_tiny"),
+                       float_steps=300, qat_steps=60)
+    print(format_rows(rows))
+
+For each rounding mode it reports float accuracy, int8 accuracy after
+plain PTQ, int8 accuracy after QAT fine-tuning (same seed, same
+calibration set), the two deltas, and the Table-2 footprint saving.
+`benchmarks/bench_train_caps.py` drives this as a benchmark section;
+tests pin `delta_qat <= delta_ptq` for the edge_tiny seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.captrain.losses import accuracy_count
+from repro.captrain.trainer import CapsTrainer, TrainConfig
+from repro.data.synthetic import make_image_dataset
+from repro.nn.config import CapsNetConfig
+from repro.nn.pipeline import CapsPipeline, QuantCapsNet
+
+
+def eval_float(pipeline: CapsPipeline, params, images, labels,
+               batch: int = 256) -> float:
+    """Float-pipeline top-1 accuracy (exact integer counting)."""
+    correct, n = 0, images.shape[0]
+    for i in range(0, n, batch):
+        v = pipeline.forward(params, jnp.asarray(images[i:i + batch]))
+        correct += int(accuracy_count(v, jnp.asarray(labels[i:i + batch])))
+    return correct / n
+
+
+def eval_q7(qnet: QuantCapsNet, images, labels, batch: int = 256) -> float:
+    """int8 top-1 accuracy (scored by the plan's class_lengths)."""
+    correct, n = 0, images.shape[0]
+    for i in range(0, n, batch):
+        xq = qnet.quantize_input(jnp.asarray(images[i:i + batch]))
+        lengths = np.asarray(qnet.class_lengths(qnet.forward(xq)))
+        correct += int((lengths.argmax(-1) ==
+                        np.asarray(labels[i:i + batch])).sum())
+    return correct / n
+
+
+@dataclasses.dataclass(frozen=True)
+class Table2Row:
+    """One (config, rounding) line of the accuracy reproduction."""
+    name: str
+    rounding: str
+    acc_f32: float
+    acc_ptq: float
+    acc_qat: float
+    saving_pct: float
+
+    @property
+    def delta_ptq(self) -> float:
+        return self.acc_f32 - self.acc_ptq
+
+    @property
+    def delta_qat(self) -> float:
+        return self.acc_f32 - self.acc_qat
+
+
+def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
+                float_steps: int, qat_steps: int,
+                roundings=("floor", "nearest"), eval_n: int = 512,
+                eval_seed: int = 999_999, mesh=None, log=None) -> list:
+    """Train once in float, then branch per rounding mode: PTQ the float
+    weights directly, and QAT-fine-tune a copy before quantizing it —
+    same seed, same calibration images, so the two deltas are
+    comparable.  Returns [Table2Row, ...]."""
+    trainer = CapsTrainer(cfg, tcfg, mesh=mesh)
+    state, _ = trainer.resume_or_init()          # ckpt_dir -> resume
+    remaining = max(0, float_steps - trainer.step_index(state))
+    state, _, _ = trainer.fit(state, remaining,
+                              log_every=50 if log else 0,
+                              log=log or print)
+
+    images, labels = make_image_dataset(tcfg.dataset, eval_n,
+                                        seed=eval_seed)
+    acc_f = eval_float(trainer.pipeline, state["params"]["caps"],
+                       images, labels)
+
+    rows = []
+    for rounding in roundings:
+        # QAT branches fork from the float weights; no checkpointing here
+        # (they would clobber the float run's snapshots)
+        rtc = dataclasses.replace(tcfg, rounding=rounding, ckpt_every=0)
+        q_ptq = trainer.quantize(state, rounding=rounding)
+        acc_ptq = eval_q7(q_ptq, images, labels)
+
+        qtrainer = CapsTrainer(cfg, rtc, mesh=mesh)
+        qstate, _, _ = qtrainer.fit(state, qat_steps, qat=True,
+                                    log_every=25 if log else 0,
+                                    log=log or print)
+        q_qat = qtrainer.quantize(qstate, rounding=rounding)
+        acc_qat = eval_q7(q_qat, images, labels)
+
+        fp32 = trainer.pipeline.param_bytes(state["params"]["caps"])
+        rows.append(Table2Row(
+            name=cfg.name, rounding=rounding, acc_f32=acc_f,
+            acc_ptq=acc_ptq, acc_qat=acc_qat,
+            saving_pct=100.0 * (1 - q_ptq.memory_bytes() / fp32)))
+    return rows
+
+
+def format_rows(rows) -> str:
+    """The Table-2 analogue printout (paper band: 0.07-0.18 % loss,
+    74.99 % memory saving)."""
+    head = (f"  {'config':<18}{'rounding':<10}{'fp32':>8}{'ptq':>8}"
+            f"{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}")
+    lines = [head]
+    for r in rows:
+        lines.append(
+            f"  {r.name:<18}{r.rounding:<10}{r.acc_f32:8.4f}"
+            f"{r.acc_ptq:8.4f}{r.acc_qat:8.4f}{r.delta_ptq:8.4f}"
+            f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%")
+    lines.append("  paper Table 2: accuracy loss 0.07-0.18 %, "
+                 "saving 74.99 %")
+    return "\n".join(lines)

@@ -1,0 +1,40 @@
+"""Training losses on the typed pipeline's class capsules.
+
+Standalone (not imported from the `repro.core` shims) so the training
+subsystem depends only on `repro.nn`: margin loss (Sabour et al. eq. 4,
+the paper's training objective) and the accuracy metrics.  The
+reconstruction regularizer lives in `captrain.decoder`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def class_lengths(v):
+    """||v_j|| per class capsule; eps keeps the sqrt differentiable."""
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=-1) + 1e-9)
+
+
+def margin_loss(v, labels, num_classes: int,
+                m_pos: float = 0.9, m_neg: float = 0.1, lam: float = 0.5):
+    L = class_lengths(v)                              # [B, J]
+    T = jax.nn.one_hot(labels, num_classes)
+    pos = T * jnp.square(jnp.maximum(0.0, m_pos - L))
+    neg = lam * (1 - T) * jnp.square(jnp.maximum(0.0, L - m_neg))
+    return jnp.mean(jnp.sum(pos + neg, axis=-1))
+
+
+def predictions(v):
+    return jnp.argmax(class_lengths(v), axis=-1)
+
+
+def accuracy_count(v, labels):
+    """Number of correct rows as int32 — an integer, so summing counts
+    across microbatches/devices is exact in any association order
+    (steps.py relies on this for bit-reproducible metrics)."""
+    return jnp.sum((predictions(v) == labels).astype(jnp.int32))
+
+
+def accuracy(v, labels):
+    return accuracy_count(v, labels) / labels.shape[0]

@@ -1,0 +1,104 @@
+"""Data-parallel capsule train steps with bit-reproducible gradients.
+
+The ROADMAP gap this closes: serving waves shard (PR 2) but training
+never did.  The obstacle to *pinned* parity is floating-point reduction
+order — a plain `jnp.mean` over a sharded batch lets XLA pick how the
+per-device partial sums combine, so an 8-way step and a 1-way step agree
+only approximately.  Here the reduction order is part of the step's
+definition instead:
+
+  1. the batch is reshaped into S fixed microbatches [S, B/S, ...] and
+     sharding-constrained on the logical BATCH axis over S
+     (`dist.api.shard`), so each device owns whole microbatches;
+  2. `vmap(value_and_grad)` computes one loss/grad per microbatch with
+     NO cross-microbatch arithmetic (each microbatch's internal
+     reductions run identically whether its slice lives on device 0 or
+     device k);
+  3. the S partials combine through an explicit pairwise halving tree
+     (`pairwise_reduce`) — elementwise adds in a fixed association
+     order, which XLA executes exactly as written on any mesh;
+  4. the reduced gradients are constrained back to replicated before the
+     optimizer, so the AdamW update (and its global-norm reduction) runs
+     on full, bit-identical arrays on every device.
+
+Net effect: the same jitted step function is bit-identical with no
+mesh, a 1-device mesh, and an 8-device mesh (pinned in
+tests/test_captrain.py), and `S` — not the device count — defines the
+numerics, so *growing the mesh never changes the loss curve*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.captrain.losses import accuracy_count, margin_loss
+from repro.dist import api
+
+
+def pairwise_reduce(a):
+    """Sum over a power-of-two leading axis in a fixed halving tree:
+    ((a0+a1)+(a2+a3))+... — the association order is explicit in the
+    graph, so sharded and unsharded execution add in the same order."""
+    n = a.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"leading axis must be a power of two, got {n}")
+    while a.shape[0] > 1:
+        a = a[0::2] + a[1::2]
+    return a[0]
+
+
+def tree_pairwise_mean(tree, n: int):
+    return jax.tree.map(lambda g: pairwise_reduce(g) / n, tree)
+
+
+def make_train_step(pipeline, decoder, opt, *, num_classes: int,
+                    microbatches: int = 8, recon_weight: float = 0.0,
+                    plan=None, rounding: str = "floor"):
+    """Build one jitted step: (state, x, y) -> (state, metrics).
+
+    plan=None trains the float pipeline; a PipelinePlan switches the
+    forward to `CapsPipeline.forward_fq` (fake-quant QAT) on that plan's
+    grids.  The plan is baked into the graph (its shifts are Python
+    ints), so a recalibrated plan compiles a fresh step — the trainer
+    caches per plan.  Trace the returned function under `with mesh:` to
+    bake in the BATCH sharding constraints.
+    """
+    S = microbatches
+    if S < 1 or (S & (S - 1)):
+        raise ValueError(f"microbatches must be a power of two, got {S}")
+
+    def micro_loss(tparams, x, y):
+        """Loss of ONE microbatch (mean over its rows only)."""
+        if plan is None:
+            v = pipeline.forward(tparams["caps"], x)
+        else:
+            v = pipeline.forward_fq(tparams["caps"], x, plan,
+                                    rounding=rounding)
+        loss = margin_loss(v, y, num_classes)
+        if decoder is not None and recon_weight > 0:
+            loss = loss + recon_weight * decoder.loss(tparams["dec"], v, y,
+                                                      x)
+        return loss, accuracy_count(v, y)
+
+    def step(state, x, y):
+        if x.shape[0] % S:
+            raise ValueError(f"batch {x.shape[0]} not divisible by "
+                             f"microbatches={S}")
+        xs = api.shard(x.reshape((S, x.shape[0] // S) + x.shape[1:]),
+                       api.BATCH)
+        ys = api.shard(y.reshape(S, -1), api.BATCH)
+        grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+        (losses, counts), grads = jax.vmap(
+            grad_fn, in_axes=(None, 0, 0))(state["params"], xs, ys)
+        loss = pairwise_reduce(losses) / S
+        acc = jnp.sum(counts) / x.shape[0]          # int sum: order-free
+        grads = jax.tree.map(
+            lambda g: api.shard(pairwise_reduce(g) / S), grads)
+        params, opt_state, info = opt.update(grads, state["opt"],
+                                             state["params"])
+        metrics = {"loss": loss, "accuracy": acc,
+                   "grad_norm": info["grad_norm"], "lr": info["lr"],
+                   "step": opt_state["step"]}
+        return {"params": params, "opt": opt_state}, metrics
+
+    return jax.jit(step)

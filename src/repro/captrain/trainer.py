@@ -1,0 +1,232 @@
+"""CapsTrainer: float + fake-quant (QAT) training of `CapsPipeline`s.
+
+One trainer object owns the pieces the legacy example script wired up ad
+hoc: the typed pipeline, the reconstruction-decoder regularizer, an
+`repro.optim.AdamW`, the deterministic data-parallel step builder
+(`captrain.steps`), and checkpoint/resume through `repro.ckpt`.
+
+QAT deliberately adds no second quantization path.  The plan a QAT step
+trains against comes from `CapsPipeline.calibrate` + `.plan` — the
+EXACT machinery PTQ uses (Alg. 6/7) — re-derived every
+`recalib_every` steps from the current weights; the finished model goes
+through the ordinary `pipeline.quantize`, so it lowers with
+`repro.edge.lower` and serves through `serving.ModelRegistry` with zero
+new conversion code.
+
+Determinism contract (pinned in tests/test_captrain.py):
+  * batches are pure functions of the optimizer step index
+    (`data.synthetic.ImageTask`), so restoring a checkpoint resumes the
+    exact sample stream — same step counter => same loss, bit for bit;
+  * the QAT plan is part of the checkpoint (a JSON side-car via
+    `nn.plans.plan_to_json`), so a resume between recalibrations trains
+    against the same grids the original run did;
+  * steps are bit-identical across meshes (see steps.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro import ckpt
+from repro.captrain.decoder import ReconDecoder
+from repro.captrain.steps import make_train_step
+from repro.data.synthetic import ImageTask
+from repro.nn.config import CapsNetConfig
+from repro.nn.pipeline import CapsPipeline, QuantCapsNet
+from repro.nn.plans import PipelinePlan, plan_from_json, plan_to_json
+from repro.optim.adam import AdamW
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Everything about HOW to train (the CapsNetConfig says WHAT)."""
+    dataset: str = "mnist"          # data.synthetic kind
+    batch: int = 64
+    microbatches: int = 8           # gradient-tree leaves (power of two)
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    clip_norm: float = 0.0
+    recon_weight: float = 0.0005    # paper's decoder regularizer scale
+    decoder_hidden: tuple = (64, 128)
+    rounding: str = "floor"         # QAT trains against this rounding
+    recalib_every: int = 50         # re-derive the QAT plan every N steps
+    calib_n: int = 64
+    calib_seed: int = 555_555
+    per_channel: bool = False
+    softmax_impl: str = "q7"
+    seed: int = 0
+    ckpt_every: int = 0             # 0 = checkpointing off
+    ckpt_dir: str | None = None
+    ckpt_keep: int = 3
+
+
+class CapsTrainer:
+    def __init__(self, cfg: CapsNetConfig, tcfg: TrainConfig = TrainConfig(),
+                 mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.pipeline = CapsPipeline.from_config(
+            cfg, softmax_impl=tcfg.softmax_impl,
+            per_channel=tcfg.per_channel)
+        self.decoder = ReconDecoder(
+            cfg.num_classes, cfg.caps_dim, tuple(cfg.input_shape),
+            hidden=tuple(tcfg.decoder_hidden)) \
+            if tcfg.recon_weight > 0 else None
+        self.opt = AdamW(lr=tcfg.lr, weight_decay=tcfg.weight_decay,
+                         clip_norm=tcfg.clip_norm)
+        self.task = ImageTask(tcfg.dataset, seed=tcfg.seed)
+        self._steps: dict = {}      # plan key -> jitted step
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+    def init_state(self, key=None) -> dict:
+        key = jax.random.key(self.tcfg.seed) if key is None else key
+        kc, kd = jax.random.split(key)
+        params = {"caps": self.pipeline.init(kc),
+                  "dec": self.decoder.init(kd) if self.decoder else {}}
+        return {"params": params, "opt": self.opt.init(params)}
+
+    @staticmethod
+    def step_index(state) -> int:
+        return int(state["opt"]["step"])
+
+    # ------------------------------------------------------------------
+    # one step
+    # ------------------------------------------------------------------
+    def _step_fn(self, plan: PipelinePlan | None):
+        key = "float" if plan is None else repr(plan)
+        if key not in self._steps:
+            # recalibration never returns to an old plan: keep the float
+            # step plus the CURRENT QAT step, drop superseded executables
+            for stale in [k for k in self._steps if k != "float"]:
+                del self._steps[stale]
+            self._steps[key] = make_train_step(
+                self.pipeline, self.decoder, self.opt,
+                num_classes=self.cfg.num_classes,
+                microbatches=self.tcfg.microbatches,
+                recon_weight=self.tcfg.recon_weight,
+                plan=plan, rounding=self.tcfg.rounding)
+        return self._steps[key]
+
+    def train_step(self, state, x, y, plan: PipelinePlan | None = None):
+        """One (sharded, if the trainer has a mesh) optimizer step."""
+        fn = self._step_fn(plan)
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.int32)
+        if self.mesh is not None:
+            with self.mesh:
+                return fn(state, x, y)
+        return fn(state, x, y)
+
+    # ------------------------------------------------------------------
+    # QAT plan derivation — the PTQ machinery, reused verbatim
+    # ------------------------------------------------------------------
+    def calib_images(self):
+        """Fixed calibration set, disjoint from the train stream (its own
+        seed) — QAT plans and the final PTQ see the same references."""
+        imgs, _ = ImageTask(self.tcfg.dataset,
+                            seed=self.tcfg.calib_seed).batch(
+            0, self.tcfg.calib_n)
+        return jnp.asarray(imgs)
+
+    def derive_plan(self, state) -> PipelinePlan:
+        """calibrate + plan on the CURRENT weights — identical to what
+        `pipeline.quantize` would derive for them (pinned by tests)."""
+        params = state["params"]["caps"]
+        stats = self.pipeline.calibrate(params, self.calib_images())
+        return self.pipeline.plan(params, stats)
+
+    def quantize(self, state, *, rounding: str | None = None,
+                 backend: str = "jnp") -> QuantCapsNet:
+        """Trained params -> int8 model via the ordinary PTQ entry point
+        (same calibration set the QAT plans were derived from)."""
+        return self.pipeline.quantize(
+            state["params"]["caps"], self.calib_images(),
+            rounding=rounding or self.tcfg.rounding, backend=backend)
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume
+    # ------------------------------------------------------------------
+    def save(self, state, plan: PipelinePlan | None = None) -> str:
+        if not self.tcfg.ckpt_dir:
+            raise ValueError("TrainConfig.ckpt_dir is not set")
+        step = self.step_index(state)
+        d = pathlib.Path(self.tcfg.ckpt_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        # the plan side-car lands (atomically) BEFORE ckpt.save publishes
+        # LATEST: a crash in between leaves an unreferenced side-car, never
+        # a resumable QAT snapshot without its grids
+        side = d / f"plan_{step:08d}.json"
+        if plan is not None:
+            tmp = side.with_suffix(".json.tmp")
+            tmp.write_text(json.dumps(plan_to_json(plan), sort_keys=True))
+            os.replace(tmp, side)
+        elif side.exists():
+            side.unlink()
+        path = ckpt.save(self.tcfg.ckpt_dir, step, state)
+        ckpt.gc_keep_n(self.tcfg.ckpt_dir, keep=self.tcfg.ckpt_keep)
+        for orphan in d.glob("plan_*.json"):     # side-cars of GC'd snaps
+            if not (d / f"step_{orphan.stem[5:]}.npz").exists():
+                orphan.unlink(missing_ok=True)
+        return path
+
+    def resume_or_init(self, key=None):
+        """(state, plan) from the newest checkpoint, or a fresh init."""
+        example = self.init_state(key)
+        if not self.tcfg.ckpt_dir:
+            return example, None
+        step, restored = ckpt.restore_latest(self.tcfg.ckpt_dir, example)
+        if step is None:
+            return example, None
+        side = pathlib.Path(self.tcfg.ckpt_dir) / f"plan_{step:08d}.json"
+        plan = plan_from_json(json.loads(side.read_text())) \
+            if side.exists() else None
+        return restored, plan
+
+    # ------------------------------------------------------------------
+    # training loop
+    # ------------------------------------------------------------------
+    def fit(self, state, num_steps: int, *, qat: bool = False,
+            plan: PipelinePlan | None = None, log_every: int = 0,
+            log=print):
+        """Run `num_steps` optimizer steps from wherever `state` is.
+
+        qat=False trains the float pipeline (plan ignored).  qat=True
+        trains fake-quant: the plan is (re)derived from the live weights
+        whenever the step counter crosses a `recalib_every` boundary —
+        and on entry when no plan was carried in (fresh QAT start or a
+        resume whose checkpoint predates QAT).
+        Returns (state, plan, history) with history rows
+        {"step", "loss", "accuracy", "grad_norm"}.
+        """
+        tc = self.tcfg
+        history = []
+        for _ in range(num_steps):
+            i = self.step_index(state)           # batch index == step
+            if qat and (plan is None or
+                        (tc.recalib_every > 0 and i > 0
+                         and i % tc.recalib_every == 0)):
+                plan = self.derive_plan(state)
+            x, y = self.task.batch(i, tc.batch)
+            state, metrics = self.train_step(state, x, y,
+                                             plan if qat else None)
+            row = {"step": int(metrics["step"]),
+                   "loss": float(metrics["loss"]),
+                   "accuracy": float(metrics["accuracy"]),
+                   "grad_norm": float(metrics["grad_norm"])}
+            history.append(row)
+            done = self.step_index(state)
+            if log_every and (done % log_every == 0 or done == 1):
+                log(f"  step {row['step']:5d}: loss={row['loss']:.4f} "
+                    f"acc={row['accuracy']:.3f}"
+                    + (" [qat]" if qat else ""))
+            if tc.ckpt_every and tc.ckpt_dir and done % tc.ckpt_every == 0:
+                self.save(state, plan if qat else None)
+        return state, plan, history

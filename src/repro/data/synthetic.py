@@ -78,11 +78,19 @@ def _shape_mask(kind: int, size: int = 24) -> np.ndarray:
     return (r <= 0.45 + 0.4 * np.cos(5 * a) ** 2).astype(np.float32)  # star
 
 
+_DIGIT_MAPS_SMALL = [np.kron(_bitmap(t), np.ones((2, 2), np.float32))
+                     for t in DIGITS]                  # 14 x 10
+
 def make_image_dataset(kind: str, n: int, seed: int = 0):
-    """kind: mnist | smallnorb | cifar10.  Returns (images NHWC, labels)."""
+    """kind: mnist | smallnorb | cifar10 | edge_tiny.
+    Returns (images NHWC, labels).  "edge_tiny" is the MNIST analogue
+    shrunk to the serving registry's EDGE_TINY geometry (16x16x1, digits
+    0-3) so the deep-edge config has a real accuracy task to train on."""
     rng = np.random.default_rng(seed)
     if kind == "mnist":
         H, W, C, ncls = 28, 28, 1, 10
+    elif kind == "edge_tiny":
+        H, W, C, ncls = 16, 16, 1, 4
     elif kind == "smallnorb":
         H, W, C, ncls = 32, 32, 2, 5
     else:
@@ -93,6 +101,10 @@ def make_image_dataset(kind: str, n: int, seed: int = 0):
         y = int(labels[i])
         if kind == "mnist":
             base = _affine_place((H, W), _DIGIT_MAPS[y], rng)
+            imgs[i, :, :, 0] = base
+        elif kind == "edge_tiny":
+            base = _affine_place((H, W), _DIGIT_MAPS_SMALL[y], rng,
+                                 max_shift=1)
             imgs[i, :, :, 0] = base
         elif kind == "smallnorb":
             m = _shape_mask(y)

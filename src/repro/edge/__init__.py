@@ -9,6 +9,8 @@ from repro.edge.arena import (ArenaPlan, assign_offsets,  # noqa: F401
                               op_scratch_bytes, plan_arena)
 from repro.edge.emit_c import emit_c, save_c  # noqa: F401
 from repro.edge.export import export_artifacts, format_export  # noqa: F401
+from repro.edge.importer import (load_qnet, program_config,  # noqa: F401
+                                 to_qnet)
 from repro.edge.lower import describe, lower  # noqa: F401
 from repro.edge.program import (EdgeOp, EdgeProgram,  # noqa: F401
                                 TensorSpec)

@@ -11,11 +11,17 @@ bucketed micro-batch scheduler, and prints the serving metrics.  With
 --compare-b1 it replays the same requests through a batch-size-1 loop to
 show what micro-batching buys; with --mesh host the waves run sharded
 over the logical BATCH axes of a mesh built from the local devices.
+With --capsbin PATH the engine serves an exported MCU artifact instead:
+the `.capsbin` is imported back into a QuantCapsNet (repro.edge
+importer) and installed under its program name — the bits in flight are
+exactly the bits that shipped.
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+import numpy as np
 
 from repro.launch.mesh import make_host_mesh
 from repro.serving import ModelRegistry, default_specs, serve_window
@@ -23,8 +29,12 @@ from repro.serving import ModelRegistry, default_specs, serve_window
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--model", choices=sorted(default_specs()),
-                    default="mnist@jnp")
+    ap.add_argument("--model", default="mnist@jnp",
+                    help=f"registry id ({', '.join(sorted(default_specs()))})"
+                    "; ignored when --capsbin is given")
+    ap.add_argument("--capsbin", metavar="PATH", default=None,
+                    help="serve an exported .capsbin artifact (imported "
+                    "via repro.edge, installed under its program name)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--buckets", default="1,4,16,64",
                     help="comma-separated micro-batch bucket sizes")
@@ -46,29 +56,47 @@ def main():
     mesh = make_host_mesh(("pod", "model", "data")) \
         if args.mesh == "host" else None
     registry = ModelRegistry(mesh=mesh)
-    spec = registry.specs[args.model]
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    images = spec.images(args.requests, args.seed)
 
-    print(f"[serve_caps] model={args.model} ({spec.config.name}, "
-          f"backend={spec.backend}) buckets={buckets} "
-          f"mesh={'none' if mesh is None else dict(mesh.shape)}")
-    t0 = time.perf_counter()
-    registry.model(args.model)
-    print(f"[serve_caps] lazy PTQ build: {time.perf_counter() - t0:.2f} s "
-          f"({registry.model(args.model).memory_bytes() / 1000:.1f} KB int8)")
+    if args.capsbin:
+        qnet = registry.install_artifact(args.capsbin)
+        model_id = qnet.pipeline.cfg.name        # the program's name
+        rng = np.random.default_rng(args.seed)
+        images = rng.uniform(0, 1, (args.requests,)
+                             + registry.input_shape(model_id)) \
+            .astype(np.float32)
+        print(f"[serve_caps] imported {args.capsbin} as {model_id!r} "
+              f"({qnet.memory_bytes() / 1000:.1f} KB int8) "
+              f"buckets={buckets} "
+              f"mesh={'none' if mesh is None else dict(mesh.shape)}")
+    else:
+        model_id = args.model
+        if model_id not in registry.specs:
+            ap.error(f"unknown model {model_id!r}; have "
+                     f"{sorted(registry.specs)} (or pass --capsbin)")
+        spec = registry.specs[model_id]
+        images = spec.images(args.requests, args.seed)
+        print(f"[serve_caps] model={model_id} ({spec.config.name}, "
+              f"backend={spec.backend}) buckets={buckets} "
+              f"mesh={'none' if mesh is None else dict(mesh.shape)}")
+        t0 = time.perf_counter()
+        registry.model(model_id)
+        print(f"[serve_caps] lazy PTQ build: "
+              f"{time.perf_counter() - t0:.2f} s "
+              f"({registry.model(model_id).memory_bytes() / 1000:.1f} "
+              "KB int8)")
     if args.export:
         from repro.edge import format_export
-        result = registry.export(args.model, args.export)
+        result = registry.export(model_id, args.export)
         print("[serve_caps] exported MCU artifact:")
         print(format_export(result))
 
-    engine, wall = serve_window(registry, buckets, images, args.model)
+    engine, wall = serve_window(registry, buckets, images, model_id)
     print("[serve_caps]", engine.metrics.report())
     print(f"[serve_caps] executables compiled: {registry.compile_count}, "
           f"cache hits: {registry.exec_hits}")
     if args.compare_b1:
-        b1_engine, b1_wall = serve_window(registry, (1,), images, args.model)
+        b1_engine, b1_wall = serve_window(registry, (1,), images, model_id)
         print("[serve_caps] b1  :", b1_engine.metrics.report())
         print(f"[serve_caps] batched speedup over b1 loop: "
               f"{b1_wall / max(wall, 1e-9):.2f}x")

@@ -15,6 +15,20 @@ Every layer is a small frozen object with one protocol (`CapsLayer`):
 pipeline can verify calibration completeness instead of KeyError-ing deep
 inside a walk.  int8 shapes come from the data, never the config, so the
 same layer objects serve ad-hoc geometries (benchmarks, kernel tests).
+
+Layers also carry a fourth, training-only face used by `repro.captrain`:
+
+  fwd_fq(params, plan, x, *, rounding) -> y   fake-quantized float forward
+                                   (QAT): every tensor the int8 graph
+                                   would quantize is snapped onto the SAME
+                                   Qm.n grid the plan prescribes, with a
+                                   straight-through gradient
+                                   (`qformat.fake_quant`).  Weights and
+                                   the softmax couplings use the nearest
+                                   quantizer (like Alg. 7); activations
+                                   use the net's rounding mode so floor
+                                   training sees the truncation bias of
+                                   the `>> shift` requantization.
 """
 from __future__ import annotations
 
@@ -41,6 +55,7 @@ class CapsLayer(Protocol):
     def quantize(self, params, plan) -> dict: ...
     def fwd_q7(self, qweights, plan, x, *, backend="jnp",
                rounding="floor"): ...
+    def fwd_fq(self, params, plan, x, *, rounding="floor"): ...
 
 
 def _conv(x, w, b, stride: int):
@@ -129,6 +144,20 @@ class QuantConv2D:
                              rounding=rounding)
         return be.relu_q7(y) if self.relu else y
 
+    def fwd_fq(self, params, plan: ConvPlan, x, *, rounding="floor"):
+        """Fake-quant forward mirroring fwd_q7's requantization points:
+        weights/bias on their plan grids (nearest, like Alg. 7), the
+        accumulator snapped to out_frac with the net's rounding."""
+        if plan.per_channel:
+            w = qf.fake_quant_with_fracs(params["w"],
+                                         plan.w_frac_per_channel, axis=-1)
+        else:
+            w = qf.fake_quant(params["w"], plan.w_frac)
+        b = qf.fake_quant(params["b"], plan.b_frac)
+        y = qf.fake_quant(_conv(x, w, b, self.stride), plan.out_frac,
+                          rounding)
+        return jax.nn.relu(y) if self.relu else y
+
 
 @dataclasses.dataclass(frozen=True)
 class PrimaryCaps:
@@ -179,6 +208,11 @@ class PrimaryCaps:
         u = y.reshape(y.shape[0], -1, self.dim)
         return get_backend(backend).squash_q7(
             u, in_frac=plan.conv.out_frac, out_frac=plan.squash_out_frac)
+
+    def fwd_fq(self, params, plan: PrimaryCapsPlan, x, *, rounding="floor"):
+        y = self.conv.fwd_fq(params, plan.conv, x, rounding=rounding)
+        u = squash(y.reshape(y.shape[0], -1, self.dim), axis=-1)
+        return qf.fake_quant(u, plan.squash_out_frac, rounding)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,3 +288,44 @@ class CapsuleRouting:
         u_hat = be.uhat_q7(qweights["W"], u, shift=plan.uhat_shift,
                            rounding=rounding)
         return be.routing_q7(u_hat, plan, rounding=rounding)
+
+    @staticmethod
+    def _softmax_fq(b, impl: str):
+        """Couplings in Q0.7 the way the int8 graph computes them.  For
+        the "q7" (arm_softmax-style) variant the forward is the same
+        powers-of-two-of-floor(x-max) approximation as
+        `int8_ops.softmax_q7` — the routing loop's coarsest operator,
+        which QAT must train against — with the float softmax as the
+        straight-through gradient surrogate."""
+        sm = jax.nn.softmax(b, axis=1)
+        if impl != "q7":                         # "precise" variant
+            return qf.fake_quant(sm, 7)
+        e = jnp.maximum(jnp.floor(b - jnp.max(b, axis=1, keepdims=True)),
+                        -20.0)
+        p = jnp.exp2(e)
+        c = jnp.clip(jnp.floor(p * 128.0 / jnp.sum(p, axis=1,
+                                                   keepdims=True)),
+                     0.0, 127.0) / 128.0
+        return sm + jax.lax.stop_gradient(c - sm)
+
+    def fwd_fq(self, params, plan: RoutingPlan, u, *, rounding="floor"):
+        """Fake-quant routing: u_hat, couplings, per-iteration s/v and
+        the accumulated logits all snap to the grids routing_q7 uses
+        (couplings via the plan's softmax_impl, like the backends; the
+        logit clamp models add_q7's int8 saturation)."""
+        W = qf.fake_quant(params["W"], plan.W_frac)
+        u_hat = qf.fake_quant(jnp.einsum("jiod,bid->bjio", W, u),
+                              plan.uhat_frac, rounding)
+        b = jnp.zeros(u_hat.shape[:3], jnp.float32)
+        v = None
+        for r in range(self.routings):
+            c = self._softmax_fq(b, plan.softmax_impl)
+            s = qf.fake_quant(jnp.einsum("bji,bjio->bjo", c, u_hat),
+                              plan.caps_out_fracs[r], rounding)
+            v = qf.fake_quant(squash(s, axis=-1), plan.squash_out_frac,
+                              rounding)
+            if r < self.routings - 1:
+                a = qf.fake_quant(jnp.einsum("bjio,bjo->bji", u_hat, v),
+                                  plan.logit_frac, rounding)
+                b = qf.fake_quant(b + a, plan.logit_frac, rounding)
+        return v

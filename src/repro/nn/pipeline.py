@@ -59,6 +59,11 @@ class CapsPipeline:
         ks = jax.random.split(key, len(self.layers))
         return {l.name: l.init(k) for l, k in zip(self.layers, ks)}
 
+    @staticmethod
+    def param_bytes(params) -> int:
+        """fp32 footprint of a param pytree (Table 2's numerator)."""
+        return sum(4 * l.size for l in jax.tree_util.tree_leaves(params))
+
     # ------------------------------------------------------------------
     # float face
     # ------------------------------------------------------------------
@@ -124,6 +129,20 @@ class CapsPipeline:
                     for l in self.layers}
         return QuantCapsNet(pipeline=self, plan=plan, qweights=qweights,
                             rounding=rounding, backend=backend)
+
+    # ------------------------------------------------------------------
+    # fake-quant face (QAT; see repro.captrain)
+    # ------------------------------------------------------------------
+    def forward_fq(self, params, x, plan: PipelinePlan, *,
+                   rounding: str = "floor"):
+        """Float forward with every int8 quantization point fake-applied
+        on the plan's Qm.n grids (straight-through gradients).  The plan
+        comes from the SAME `plan()` machinery PTQ uses, so a QAT model
+        quantizes/lowers/serves with zero new conversion code."""
+        h = qf.fake_quant(x, plan.input_frac)
+        for l in self.layers:
+            h = l.fwd_fq(params[l.name], plan[l.name], h, rounding=rounding)
+        return h
 
     # ------------------------------------------------------------------
     # int8 face

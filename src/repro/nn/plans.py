@@ -104,6 +104,55 @@ class PipelinePlan:
         return self.layers[name]
 
 
+_PLAN_KINDS = {}                      # class name -> plan dataclass
+
+
+def _register(cls):
+    _PLAN_KINDS[cls.__name__] = cls
+    return cls
+
+
+for _cls in (ConvPlan, PrimaryCapsPlan, RoutingPlan):
+    _register(_cls)
+
+
+def plan_to_json(plan) -> dict:
+    """Typed plan -> JSON-safe dict (used by captrain's QAT checkpoints
+    and anything else that wants a plan outside a Python process)."""
+    if isinstance(plan, PipelinePlan):
+        return {"kind": "PipelinePlan", "input_frac": plan.input_frac,
+                "layers": {k: plan_to_json(p)
+                           for k, p in plan.layers.items()}}
+    d = {"kind": type(plan).__name__}
+    for f in dataclasses.fields(plan):
+        v = getattr(plan, f.name)
+        if dataclasses.is_dataclass(v):
+            v = plan_to_json(v)
+        elif isinstance(v, tuple):
+            v = list(v)
+        d[f.name] = v
+    return d
+
+
+def plan_from_json(d: dict):
+    """Inverse of plan_to_json; round-trips bit-exactly (all-int plans)."""
+    kind = d["kind"]
+    if kind == "PipelinePlan":
+        return PipelinePlan(input_frac=d["input_frac"],
+                            layers={k: plan_from_json(p)
+                                    for k, p in d["layers"].items()})
+    cls = _PLAN_KINDS[kind]
+    kw = {}
+    for f in dataclasses.fields(cls):
+        v = d[f.name]
+        if isinstance(v, dict) and "kind" in v:
+            v = plan_from_json(v)
+        elif isinstance(v, list):
+            v = tuple(v)
+        kw[f.name] = v
+    return cls(**kw)
+
+
 def plan_scalars(plan) -> int:
     """Number of scalar entries a plan materializes at runtime (the
     analogue of the old shift table's length, for footprint accounting)."""

@@ -97,3 +97,42 @@ def out_shift(f_ia: int, f_ib: int, f_o: int) -> int:
 
 def bias_shift(f_ia: int, f_ib: int, f_b: int) -> int:
     return f_ia + f_ib - f_b
+
+
+# ---------------------------------------------------------------------------
+# fake quantization (QAT): the same Qm.n clamp, straight-through gradient
+# ---------------------------------------------------------------------------
+def _ste(x, q):
+    """Straight-through estimator: forward `q`, gradient of identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant(x, n: int, rounding: str = "nearest"):
+    """quantize(x, n) -> dequantize, differentiably (STE).
+
+    Forward lands exactly on the Qm.n grid `quantize` would produce —
+    the same round/floor and the same [-128, 127] saturation.  "nearest"
+    matches the weight/input quantizer (`quantize`); "floor" matches the
+    truncating accumulator shift (`int8_ops.rshift_sat8`), so fake-quant
+    activations see the same truncation bias the int8 graph has.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    scaled = x * (2.0 ** n)
+    r = jnp.round(scaled) if rounding == "nearest" else jnp.floor(scaled)
+    q = jnp.clip(r, INT8_MIN, INT8_MAX) * (2.0 ** -n)
+    return _ste(x, q)
+
+
+def fake_quant_with_fracs(x, ns, axis: int, rounding: str = "nearest"):
+    """Per-slice fake quantization along `axis` (the QAT face of
+    `quantize_with_fracs`; `ns` comes from a plan, e.g.
+    `ConvPlan.w_frac_per_channel`)."""
+    x = jnp.asarray(x, jnp.float32)
+    shape = [1] * x.ndim
+    shape[axis] = -1
+    scale = jnp.asarray(2.0, jnp.float32) ** \
+        jnp.asarray(ns, jnp.float32).reshape(shape)
+    scaled = x * scale
+    r = jnp.round(scaled) if rounding == "nearest" else jnp.floor(scaled)
+    q = jnp.clip(r, INT8_MIN, INT8_MAX) / scale
+    return _ste(x, q)

@@ -112,6 +112,17 @@ class ModelRegistry:
         for key in [k for k in self._execs if k[0] == model_id]:
             del self._execs[key]
 
+    def install_artifact(self, capsbin_path, *,
+                         model_id: str | None = None) -> QuantCapsNet:
+        """Serve exactly the artifact `export_caps` shipped: load the
+        `.capsbin`, rebuild a QuantCapsNet from its ops (repro.edge
+        importer — bit-identical to the EdgeVM), and install it under
+        `model_id` (default: the program's own name)."""
+        from repro.edge import load_qnet
+        qnet = load_qnet(capsbin_path)
+        self.install(model_id or qnet.pipeline.cfg.name, qnet)
+        return qnet
+
     def model_ids(self) -> tuple:
         return tuple(sorted(set(self.specs) | set(self._models)))
 

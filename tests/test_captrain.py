@@ -1,0 +1,349 @@
+"""Training-subsystem tests (repro.captrain).
+
+Pinned guarantees:
+  * the fake-quant faces really live on the int8 grid: a conv layer's
+    `fwd_fq` is BIT-identical to the dequantized `fwd_q7` (the int32
+    accumulator is exactly representable in fp32 at these sizes), and
+    `fake_quant`'s gradient is the straight-through identity;
+  * QAT trains against the exact plans PTQ derives: `derive_plan` on a
+    QAT-trained state equals the plan `pipeline.quantize` produces, and
+    the quantized model round-trips through `lower()` / `EdgeVM` /
+    `export_artifacts`' built-in re-verify bit-exactly;
+  * checkpoint resume is deterministic: same step counter => same loss,
+    bit for bit, including a resume mid-way through a QAT
+    recalibration interval (the plan side-car);
+  * the tree-reduced data-parallel step is bit-identical to the
+    unsharded step on a 1-device mesh (fast tier) and on a real
+    8-device mesh (slow tier, forced-host-device subprocess);
+  * acceptance: a QAT fine-tuned edge_tiny exports with re-verify
+    passing, and its float-vs-int8 accuracy delta on the synthetic
+    edge-MNIST analogue is <= the plain-PTQ delta for the same seed.
+"""
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.captrain import (CapsTrainer, TrainConfig, eval_q7,
+                            pairwise_reduce, table2_rows)
+from repro.data.synthetic import make_image_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.nn.plans import plan_from_json, plan_to_json
+from repro.quant import qformat as qf
+from repro.serving.registry import EDGE_TINY
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+TINY = TrainConfig(dataset="edge_tiny", batch=32, microbatches=8,
+                   calib_n=32, lr=3e-3, recalib_every=20)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One short float+QAT run shared by the structural tests."""
+    trainer = CapsTrainer(EDGE_TINY, TINY)
+    state = trainer.init_state()
+    state, _, hist_f = trainer.fit(state, 30)
+    qstate, plan, hist_q = trainer.fit(state, 10, qat=True)
+    return trainer, state, qstate, plan, hist_f, hist_q
+
+
+# ---------------------------------------------------------------------------
+# fake-quant primitives
+# ---------------------------------------------------------------------------
+def test_fake_quant_forward_is_the_ptq_grid():
+    """Forward values land exactly where quantize->dequantize would."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1.5, (64,)).astype(np.float32))
+    for n in (2, 5, 7):
+        np.testing.assert_array_equal(
+            np.asarray(qf.fake_quant(x, n)),
+            np.asarray(qf.dequantize(qf.quantize(x, n), n)))
+        # floor mode truncates instead
+        got = np.asarray(qf.fake_quant(x, n, rounding="floor"))
+        want = np.clip(np.floor(np.asarray(x) * 2.0 ** n), -128, 127) \
+            * 2.0 ** -n
+        np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_fake_quant_gradient_is_identity():
+    x = jnp.asarray([-3.0, -0.51, 0.0, 0.26, 0.75, 9.9], jnp.float32)
+    for rounding in ("nearest", "floor"):
+        g = jax.grad(lambda t: jnp.sum(qf.fake_quant(t, 7, rounding)))(x)
+        np.testing.assert_array_equal(np.asarray(g), np.ones_like(x))
+    ns = (3, 7)
+    g = jax.grad(lambda t: jnp.sum(
+        qf.fake_quant_with_fracs(t.reshape(3, 2), ns, axis=1)))(
+        jnp.arange(6, dtype=jnp.float32) / 7)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(6, np.float32))
+
+
+def test_fake_quant_per_channel_matches_quantizer():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.3, (3, 3, 2, 4)).astype(np.float32)
+    q, ns = qf.quantize_per_channel(w, axis=-1)
+    fq = np.asarray(qf.fake_quant_with_fracs(jnp.asarray(w), ns, axis=-1))
+    want = np.asarray(q, np.float32) * \
+        (2.0 ** -np.asarray(ns, np.float32)).reshape(1, 1, 1, -1)
+    np.testing.assert_array_equal(fq, want)
+
+
+def test_conv_fwd_fq_bit_matches_dequantized_fwd_q7(trained):
+    """At edge_tiny sizes the int32 conv accumulator fits fp32 exactly,
+    so the fake-quant face must reproduce the int8 conv bit for bit
+    under floor rounding (the same `>> shift` truncation)."""
+    trainer, state, *_ = trained
+    params = state["params"]["caps"]
+    plan = trainer.derive_plan(state)
+    layer = trainer.pipeline.layer("conv0")
+    lp = plan["conv0"]
+
+    x = trainer.calib_images()[:4]
+    x_fq = np.asarray(qf.fake_quant(x, plan.input_frac))
+    x_q = np.asarray(qf.quantize(x, plan.input_frac))
+
+    y_fq = np.asarray(layer.fwd_fq(params["conv0"], lp,
+                                   jnp.asarray(x_fq), rounding="floor"))
+    qw = layer.quantize(params["conv0"], lp)
+    y_q7 = np.asarray(layer.fwd_q7(qw, lp, jnp.asarray(x_q),
+                                   rounding="floor"), np.float32)
+    np.testing.assert_array_equal(y_fq, y_q7 * 2.0 ** -lp.out_frac)
+
+
+def test_routing_fwd_fq_trains_against_plan_softmax(trained):
+    """The fake-quant couplings follow RoutingPlan.softmax_impl: the
+    "q7" variant reproduces int8_ops.softmax_q7's powers-of-two
+    probabilities (within 1 code of the integer division), and flipping
+    the plan field changes the QAT forward like it changes fwd_q7."""
+    from repro.nn.layers import CapsuleRouting
+    from repro.quant import int8_ops as q
+
+    rng = np.random.default_rng(5)
+    f = 5
+    b_q = rng.integers(-128, 128, (2, 7, 9)).astype(np.int8)
+    b = jnp.asarray(b_q, jnp.float32) * 2.0 ** -f   # on the Q(f) grid
+
+    c_fq = np.asarray(CapsuleRouting._softmax_fq(b, "q7"))  # over axis 1
+    c_int = np.asarray(q.softmax_q7(jnp.asarray(b_q).swapaxes(1, 2),
+                                    in_frac=f)).swapaxes(1, 2)
+    assert np.abs(c_fq * 128.0 - c_int).max() <= 1.0
+
+    trainer, state, *_ = trained
+    plan = trainer.derive_plan(state)
+    params = state["params"]["caps"]
+    layer = trainer.pipeline.layer("caps")
+    u, _ = trainer.pipeline.layer("pcap").fwd_f32(
+        params["pcap"],
+        trainer.pipeline.layer("conv0").fwd_f32(
+            params["conv0"], trainer.calib_images()[:2])[0])
+    rp = plan["caps"]
+    v_q7 = layer.fwd_fq(params["caps"], rp, u)
+    v_pr = layer.fwd_fq(params["caps"],
+                        dataclasses.replace(rp, softmax_impl="precise"), u)
+    assert not np.array_equal(np.asarray(v_q7), np.asarray(v_pr))
+
+
+# ---------------------------------------------------------------------------
+# deterministic reduction + plan codec
+# ---------------------------------------------------------------------------
+def test_pairwise_reduce_sums_and_validates():
+    a = jnp.arange(8.0)
+    assert float(pairwise_reduce(a)) == 28.0
+    m = jnp.arange(12.0).reshape(4, 3)
+    np.testing.assert_array_equal(np.asarray(pairwise_reduce(m)),
+                                  np.asarray(m.sum(0)))
+    with pytest.raises(ValueError, match="power of two"):
+        pairwise_reduce(jnp.arange(6.0))
+
+
+def test_plan_json_roundtrip(trained):
+    trainer, state, *_ = trained
+    plan = trainer.derive_plan(state)
+    blob = json.dumps(plan_to_json(plan), sort_keys=True)
+    assert plan_from_json(json.loads(blob)) == plan
+
+
+# ---------------------------------------------------------------------------
+# trainer: smoke, QAT<->PTQ parity, export round-trip
+# ---------------------------------------------------------------------------
+def test_trainer_loss_decreases(trained):
+    _, _, _, _, hist_f, hist_q = trained
+    assert hist_f[-1]["loss"] < hist_f[0]["loss"]
+    assert hist_f[-1]["step"] == 30
+    assert hist_q[-1]["step"] == 40          # QAT continues the counter
+    assert all(np.isfinite(h["loss"]) for h in hist_f + hist_q)
+
+
+def test_qat_plan_equals_ptq_plan(trained):
+    """The plan QAT trains against IS the plan PTQ derives for the same
+    weights — one machinery, pinned."""
+    trainer, _, qstate, _, _, _ = trained
+    qnet = trainer.quantize(qstate)
+    assert trainer.derive_plan(qstate) == qnet.plan
+
+
+def test_qat_model_lowers_and_reverifies(tmp_path, trained):
+    """A QAT-trained model goes through the UNCHANGED export path:
+    export_artifacts' built-in reload + EdgeVM re-verify passes (it
+    raises on any bit mismatch)."""
+    from repro.edge import export_artifacts
+
+    trainer, _, qstate, _, _, _ = trained
+    for rounding in ("floor", "nearest"):
+        qnet = trainer.quantize(qstate, rounding=rounding)
+        result = export_artifacts(
+            qnet, tmp_path, stem=f"qat_{rounding}",
+            verify_images=np.asarray(trainer.calib_images()[:4]))
+        assert result["verified"] == 4
+
+
+def test_step_validates_batch_geometry(trained):
+    trainer, state, *_ = trained
+    x, y = trainer.task.batch(0, 12)          # 12 % 8 != 0
+    with pytest.raises(ValueError, match="not divisible"):
+        trainer.train_step(state, x, y)
+    with pytest.raises(ValueError, match="power of two"):
+        CapsTrainer(EDGE_TINY,
+                    dataclasses.replace(TINY, microbatches=6)) \
+            .train_step(state, *trainer.task.batch(0, 30))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume determinism
+# ---------------------------------------------------------------------------
+def test_ckpt_resume_same_step_same_loss(tmp_path):
+    """Resume mid-QAT-interval: the restored run must replay the exact
+    loss stream of the uninterrupted one (plan side-car + step-indexed
+    batches + full optimizer state)."""
+    tc = dataclasses.replace(TINY, recalib_every=4, calib_n=16,
+                             ckpt_dir=str(tmp_path), ckpt_every=2)
+
+    a = CapsTrainer(EDGE_TINY, tc)
+    sa = a.init_state()
+    sa, plan_a, hist_a = a.fit(sa, 6, qat=True)   # ckpts at 2, 4, 6
+
+    # rewind to step 2 — inside the interval of the plan derived at step
+    # 0, so the resumed run MUST take the side-car plan (re-deriving from
+    # the step-2 weights would give different grids and different losses)
+    (tmp_path / "step_00000004.npz").unlink()
+    (tmp_path / "step_00000006.npz").unlink()
+    (tmp_path / "LATEST").write_text("2")
+
+    b = CapsTrainer(EDGE_TINY, tc)
+    sb, plan_b = b.resume_or_init()
+    assert b.step_index(sb) == 2
+    assert plan_b is not None and plan_b != plan_a  # pre-recalib side-car
+    sb, _, hist_b = b.fit(sb, 4, qat=True, plan=plan_b)
+
+    assert [h["step"] for h in hist_b] == [3, 4, 5, 6]
+    for ha, hb in zip(hist_a[2:], hist_b):
+        assert ha["loss"] == hb["loss"], (ha, hb)   # bit-exact
+        assert ha["accuracy"] == hb["accuracy"]
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(sa)[0],
+            jax.tree_util.tree_flatten_with_path(sb)[0]):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), pa
+
+
+def test_resume_or_init_fresh_when_no_ckpt(tmp_path):
+    tc = dataclasses.replace(TINY, ckpt_dir=str(tmp_path / "empty"))
+    trainer = CapsTrainer(EDGE_TINY, tc)
+    state, plan = trainer.resume_or_init()
+    assert trainer.step_index(state) == 0 and plan is None
+
+
+# ---------------------------------------------------------------------------
+# sharded data-parallel steps
+# ---------------------------------------------------------------------------
+def _run_steps(mesh, n_float=3, n_qat=2):
+    trainer = CapsTrainer(EDGE_TINY, TINY, mesh=mesh)
+    state = trainer.init_state()
+    state, _, hist = trainer.fit(state, n_float)
+    state, _, hist2 = trainer.fit(state, n_qat, qat=True)
+    return state, [h["loss"] for h in hist + hist2]
+
+
+def test_sharded_step_bit_parity_on_1device_mesh():
+    """Acceptance (fast half): the same trainer under a 1-device mesh
+    reproduces the meshless run bit for bit, float and QAT steps."""
+    mesh = make_host_mesh(("pod", "data", "model"))
+    s0, l0 = _run_steps(None)
+    s1, l1 = _run_steps(mesh)
+    assert l0 == l1
+    for (p, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(s0)[0],
+                              jax.tree_util.tree_flatten_with_path(s1)[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), p
+
+
+@pytest.mark.slow
+def test_sharded_step_bit_parity_on_8device_mesh():
+    """Acceptance (slow half): on a real 8-device mesh the BATCH axis
+    splits the microbatches across devices and the loss stream + final
+    state still match the unsharded run bit for bit (the tree-reduced
+    gradient contract, see captrain/steps.py)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.captrain import CapsTrainer, TrainConfig
+        from repro.serving.registry import EDGE_TINY
+
+        tc = TrainConfig(dataset="edge_tiny", batch=32, microbatches=8,
+                         calib_n=16, lr=3e-3, recalib_every=20)
+
+        def run(mesh):
+            t = CapsTrainer(EDGE_TINY, tc, mesh=mesh)
+            s = t.init_state()
+            s, _, h1 = t.fit(s, 3)
+            s, _, h2 = t.fit(s, 2, qat=True)
+            return s, [h["loss"] for h in h1 + h2]
+
+        s0, l0 = run(None)
+        mesh = Mesh(np.asarray(jax.devices()).reshape(1, 8, 1),
+                    ("pod", "data", "model"))
+        s1, l1 = run(mesh)
+        assert l0 == l1, (l0, l1)
+        for a, b in zip(jax.tree_util.tree_leaves(s0),
+                        jax.tree_util.tree_leaves(s1)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """) % SRC
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert "OK" in out.stdout, (out.stdout[-1000:], out.stderr[-3000:])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the Table-2 delta, QAT <= PTQ
+# ---------------------------------------------------------------------------
+def test_qat_delta_not_worse_than_ptq_delta():
+    """Train edge_tiny on the synthetic edge-MNIST analogue, PTQ the
+    float weights, QAT-fine-tune the same weights; under floor rounding
+    the QAT model's float-vs-int8 delta must not exceed plain PTQ's
+    (fixed seed — everything here is deterministic on CPU)."""
+    rows = table2_rows(EDGE_TINY, TINY, float_steps=120, qat_steps=40,
+                      eval_n=256, roundings=("floor",))
+    (row,) = rows
+    assert row.acc_f32 > 0.8, row                 # the task was learned
+    assert row.delta_qat <= row.delta_ptq, row    # ISSUE acceptance
+    assert row.saving_pct >= 70.0, row            # Table-2 memory story
+
+
+def test_eval_q7_scores_like_class_lengths(trained):
+    trainer, state, *_ = trained
+    qnet = trainer.quantize(state)
+    images, labels = make_image_dataset("edge_tiny", 32, seed=123)
+    acc = eval_q7(qnet, images, labels, batch=10)  # partial batches
+    xq = qnet.quantize_input(jnp.asarray(images))
+    lengths = np.asarray(qnet.class_lengths(qnet.forward(xq)))
+    want = float((lengths.argmax(-1) == labels).mean())
+    assert acc == pytest.approx(want)

@@ -317,3 +317,80 @@ def test_per_channel_weights_reconstruct_no_worse():
     err_pc = np.mean((w - np.asarray(qnet_pc.qweights["conv0"]["w"],
                                      np.float32) * 2.0 ** -ns) ** 2)
     assert err_pc <= err_pt + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# .capsbin importer (serve exactly the artifact that shipped)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_importer_roundtrip_bit_exact(per_channel):
+    """to_qnet inverts lower(): the imported model forwards bit-
+    identically and re-lowers to the very same program."""
+    from repro.edge import to_qnet
+
+    qnet, x_q = built("capsnet_edge_tiny", "nearest", per_channel)
+    program = lower(qnet)
+    q2 = to_qnet(program)
+    np.testing.assert_array_equal(
+        np.asarray(q2.forward(jnp.asarray(x_q))),
+        np.asarray(qnet.forward(jnp.asarray(x_q))))
+    assert lower(q2, name=program.name).same_as(program)
+
+
+def test_importer_multiconv_geometry():
+    """The geometry rebuild handles deeper conv stacks (CIFAR's four
+    convs), not just the single-conv edge_tiny schedule."""
+    from repro.edge import to_qnet
+
+    qnet, x_q = built("capsnet_cifar10")
+    q2 = to_qnet(lower(qnet))
+    cfg = q2.pipeline.cfg
+    assert cfg.conv_filters == (32, 32, 64, 64)
+    assert cfg.num_input_caps == qnet.pipeline.cfg.num_input_caps
+    np.testing.assert_array_equal(
+        np.asarray(q2.forward(jnp.asarray(x_q))),
+        np.asarray(qnet.forward(jnp.asarray(x_q))))
+
+
+def test_importer_from_disk_through_registry(tmp_path):
+    """ModelRegistry.install_artifact serves the on-disk .capsbin bits:
+    the served wave equals the EdgeVM executing the same file."""
+    from repro.serving import compile_wave
+
+    qnet, x_q = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    paths = program.save(tmp_path / "shipped")
+
+    reg = ModelRegistry(specs={})
+    q2 = reg.install_artifact(paths["capsbin"], model_id="shipped")
+    assert reg.has("shipped")
+    assert reg.input_shape("shipped") == tuple(EDGE_TINY.input_shape)
+    # default id = the program's own name
+    reg.install_artifact(paths["capsbin"])
+    assert reg.has("capsnet_edge_tiny")
+
+    v_vm = EdgeVM(EdgeProgram.load(paths["capsbin"])).run(x_q)
+    np.testing.assert_array_equal(
+        np.asarray(q2.forward(jnp.asarray(x_q))), v_vm)
+
+    rng = np.random.default_rng(11)
+    images = rng.uniform(0, 1, (2,) + tuple(EDGE_TINY.input_shape)) \
+        .astype(np.float32)
+    exe = reg.executable("shipped", 2)
+    np.testing.assert_array_equal(
+        np.asarray(exe(images)[0]),
+        np.asarray(q2.forward(q2.quantize_input(jnp.asarray(images)))))
+
+
+def test_importer_rejects_malformed_schedules():
+    from repro.edge import program_config, to_qnet
+    import dataclasses
+
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    doubled = dataclasses.replace(program,
+                                  ops=program.ops + (program.ops[-1],))
+    with pytest.raises(ValueError, match="CAPS_ROUTING_Q7"):
+        program_config(doubled)
+    with pytest.raises(ValueError):
+        to_qnet(doubled)
