@@ -1,0 +1,63 @@
+"""Operator-variant sweep: accuracy + host throughput per registered
+(softmax, squash) combination, per rounding mode (ISLPED'22 study).
+
+One short float training run on the edge_tiny seed, then — per rounding
+mode — one PTQ quantization whose plan is EDITED per variant set
+(`QuantCapsNet.with_variants`; weights and shifts are untouched, so the
+sweep isolates exactly what the operator approximation costs):
+
+  variant_<softmax>+<squash>_<rounding>
+      us_per_call  host (jnp oracle) time per image for the int8 forward
+      derived      int8 accuracy, delta vs fp32, and delta vs the
+                   q7+exact baseline of the same rounding
+
+The MCU-side latency argument (division-free softmax, sqrt-free squash)
+lives in the emitted C kernels; the host numbers here are the regression
+canary plus the accuracy half of the trade-off.  Smoke mode shrinks
+steps/eval to a bit-rot check.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import util
+from benchmarks.util import csv_row
+from repro.captrain import CapsTrainer, TrainConfig
+from repro.captrain.evalq import eval_float, eval_q7
+from repro.data.synthetic import make_image_dataset
+from repro.nn.variants import VariantSet, all_variant_sets
+from repro.serving import EDGE_TINY
+
+
+def main():
+    steps, eval_n, timed_n = (8, 64, 8) if util.SMOKE else (150, 512, 64)
+    tcfg = TrainConfig(dataset="edge_tiny", batch=32, microbatches=4,
+                       calib_n=32, lr=3e-3, recon_weight=0.0)
+    trainer = CapsTrainer(EDGE_TINY, tcfg)
+    state = trainer.init_state()
+    state, _, _ = trainer.fit(state, steps)
+
+    images, labels = make_image_dataset("edge_tiny", eval_n, seed=123_123)
+    acc_f = eval_float(trainer.pipeline, state["params"]["caps"],
+                       images, labels)
+    csv_row("variant_fp32_reference", 0.0, f"acc={acc_f:.4f}")
+
+    baseline = VariantSet()                      # q7+exact
+    sweep = [baseline] + [vs for vs in all_variant_sets()
+                          if vs != baseline]
+    for rounding in ("floor", "nearest"):
+        qnet = trainer.quantize(state, rounding=rounding)
+        x_t = qnet.quantize_input(jnp.asarray(images[:timed_n]))
+        acc_base = None
+        for vs in sweep:
+            q = qnet.with_variants(vs)
+            us = util.time_call(lambda: q.forward(x_t))
+            acc = eval_q7(q, images, labels)
+            if acc_base is None:                 # baseline runs first
+                acc_base = acc
+            csv_row(f"variant_{vs.tag}_{rounding}", us / timed_n,
+                    f"acc={acc:.4f}_dfp32={acc_f - acc:+.4f}"
+                    f"_dq7={acc - acc_base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

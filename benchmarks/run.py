@@ -13,6 +13,9 @@ beyond-paper:
   serving    -> bench_serving      (batched engine vs batch-1 loop)
   training   -> bench_train_caps   (float vs QAT step cost, Table-2
                                     accuracy deltas via repro.captrain)
+  variants   -> bench_variants     (ISLPED'22 approx softmax/squash:
+                                    accuracy/throughput per registered
+                                    operator-variant set x rounding)
 plus the roofline summary from the dry-run artifacts (if present).
 
 CPU wall-clock is the validation substrate (interpret-mode kernels); the
@@ -31,7 +34,7 @@ def main() -> None:
     from benchmarks import (bench_capsule_layer, bench_edge_vm,
                             bench_matmul, bench_primary_caps,
                             bench_quantization, bench_serving,
-                            bench_train_caps)
+                            bench_train_caps, bench_variants)
     print("# --- Table 2: quantization framework ---")
     bench_quantization.main()
     print("# --- Tables 3/4: int8 matmul variants ---")
@@ -46,6 +49,8 @@ def main() -> None:
     bench_edge_vm.main()
     print("# --- Training: float vs QAT steps + Table-2 accuracy ---")
     bench_train_caps.main()
+    print("# --- Operator variants: ISLPED'22 approx softmax/squash ---")
+    bench_variants.main()
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():

@@ -46,7 +46,7 @@ def main():
     print(f"   caps plan: uhat_shift={caps_plan.uhat_shift} "
           f"logit_frac={caps_plan.logit_frac} "
           f"caps_out_shifts={caps_plan.caps_out_shifts} "
-          f"softmax={caps_plan.softmax_impl}")
+          f"variants={qnet.variants.tag}")
 
     # --- int8 inference: jnp oracle vs Pallas kernel backend --------------
     x = jnp.asarray(make_image_dataset("mnist", 4, seed=2)[0])

@@ -27,6 +27,7 @@ from repro.captrain.trainer import CapsTrainer, TrainConfig
 from repro.data.synthetic import make_image_dataset
 from repro.nn.config import CapsNetConfig
 from repro.nn.pipeline import CapsPipeline, QuantCapsNet
+from repro.nn.variants import VariantSet
 
 
 def eval_float(pipeline: CapsPipeline, params, images, labels,
@@ -52,13 +53,16 @@ def eval_q7(qnet: QuantCapsNet, images, labels, batch: int = 256) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Table2Row:
-    """One (config, rounding) line of the accuracy reproduction."""
+    """One (config, variants, rounding) line of the accuracy
+    reproduction; `variant` is the operator-variant tag the int8 model
+    ran (softmax+squash, see repro.nn.variants)."""
     name: str
     rounding: str
     acc_f32: float
     acc_ptq: float
     acc_qat: float
     saving_pct: float
+    variant: str = VariantSet().tag
 
     @property
     def delta_ptq(self) -> float:
@@ -72,12 +76,24 @@ class Table2Row:
 def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
                 float_steps: int, qat_steps: int,
                 roundings=("floor", "nearest"), eval_n: int = 512,
-                eval_seed: int = 999_999, mesh=None, log=None) -> list:
+                eval_seed: int = 999_999, mesh=None, log=None,
+                variants: VariantSet | None = None) -> list:
     """Train once in float, then branch per rounding mode: PTQ the float
     weights directly, and QAT-fine-tune a copy before quantizing it —
     same seed, same calibration images, so the two deltas are
-    comparable.  Returns [Table2Row, ...]."""
+    comparable.  Returns [Table2Row, ...].
+
+    `variants` selects the int8 operator variants (repro.nn.variants):
+    PTQ/QAT plans carry them, QAT's fake-quant faces train against
+    them, and the row is tagged with the variant so approximate-op
+    deltas (ISLPED'22) read next to the baseline."""
+    if variants is not None:
+        tcfg = dataclasses.replace(tcfg, softmax_impl=variants.softmax,
+                                   squash_impl=variants.squash)
     trainer = CapsTrainer(cfg, tcfg, mesh=mesh)
+    caps = trainer.pipeline.layers[-1]
+    vtag = VariantSet(softmax=caps.softmax_impl,
+                      squash=caps.squash_impl).tag
     state, _ = trainer.resume_or_init()          # ckpt_dir -> resume
     remaining = max(0, float_steps - trainer.step_index(state))
     state, _, _ = trainer.fit(state, remaining,
@@ -108,19 +124,20 @@ def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
         rows.append(Table2Row(
             name=cfg.name, rounding=rounding, acc_f32=acc_f,
             acc_ptq=acc_ptq, acc_qat=acc_qat,
-            saving_pct=100.0 * (1 - q_ptq.memory_bytes() / fp32)))
+            saving_pct=100.0 * (1 - q_ptq.memory_bytes() / fp32),
+            variant=vtag))
     return rows
 
 
 def format_rows(rows) -> str:
     """The Table-2 analogue printout (paper band: 0.07-0.18 % loss,
     74.99 % memory saving)."""
-    head = (f"  {'config':<18}{'rounding':<10}{'fp32':>8}{'ptq':>8}"
-            f"{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}")
+    head = (f"  {'config':<18}{'variant':<16}{'rounding':<10}{'fp32':>8}"
+            f"{'ptq':>8}{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}")
     lines = [head]
     for r in rows:
         lines.append(
-            f"  {r.name:<18}{r.rounding:<10}{r.acc_f32:8.4f}"
+            f"  {r.name:<18}{r.variant:<16}{r.rounding:<10}{r.acc_f32:8.4f}"
             f"{r.acc_ptq:8.4f}{r.acc_qat:8.4f}{r.delta_ptq:8.4f}"
             f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%")
     lines.append("  paper Table 2: accuracy loss 0.07-0.18 %, "

@@ -58,7 +58,8 @@ class TrainConfig:
     calib_n: int = 64
     calib_seed: int = 555_555
     per_channel: bool = False
-    softmax_impl: str = "q7"
+    softmax_impl: str | None = None  # operator-variant references
+    squash_impl: str | None = None   # (None -> registry defaults)
     seed: int = 0
     ckpt_every: int = 0             # 0 = checkpointing off
     ckpt_dir: str | None = None
@@ -73,6 +74,7 @@ class CapsTrainer:
         self.mesh = mesh
         self.pipeline = CapsPipeline.from_config(
             cfg, softmax_impl=tcfg.softmax_impl,
+            squash_impl=tcfg.squash_impl,
             per_channel=tcfg.per_channel)
         self.decoder = ReconDecoder(
             cfg.num_classes, cfg.caps_dim, tuple(cfg.input_shape),

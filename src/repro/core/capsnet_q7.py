@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.capsnet import CapsNetConfig, pipeline
 from repro.nn import compat
+from repro.nn.variants import REGISTRY as _VARIANTS
 
 
 @dataclasses.dataclass
@@ -32,7 +33,9 @@ class QCapsNet:
     weights: dict          # int8 arrays (+ int bias)
     shifts: dict           # name -> int shift amounts / frac-bit counts
     rounding: str = "floor"   # paper/CMSIS semantics; "nearest" = option
-    softmax_impl: str = "q7"  # "q7" | "precise" (plan field, not a patch)
+    # softmax variant reference (repro.nn.variants; plan field, not a
+    # patch) — defaulted FROM the registry so this shim cannot drift
+    softmax_impl: str = _VARIANTS.default("softmax")
     backend: str = "jnp"      # "jnp" oracle | "pallas" kernels
 
     def memory_bytes(self) -> int:

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.edge.arena import ArenaPlan, op_scratch_bytes, plan_arena
 from repro.edge.program import EdgeOp, EdgeProgram
+from repro.nn.variants import REGISTRY as _VARIANTS
 
 _PER_LINE = 12
 
@@ -50,6 +51,60 @@ void capsnet_dynamic_routing_q7(const q7_t *u, const q7_t *W,
     const int8_t *caps_out_fracs, const int8_t *agree_shifts,
     uint16_t squash_out_frac, q7_t *v_out, q7_t *bufferA);
 """
+
+_SQUASH_PROTO = """\
+void {sym}(q7_t *caps, uint16_t num_caps, uint16_t caps_dim,
+    uint16_t in_frac, uint16_t out_frac);"""
+
+_ROUTING_PROTO = """\
+void {sym}(const q7_t *u, const q7_t *W,
+    uint16_t num_out, uint16_t num_in, uint16_t out_dim,
+    uint16_t in_dim, uint16_t routings, int16_t uhat_shift,
+    uint16_t logit_frac, const int8_t *caps_out_shifts,
+    const int8_t *caps_out_fracs, const int8_t *agree_shifts,
+    uint16_t squash_out_frac, q7_t *v_out, q7_t *bufferA);"""
+
+
+def _variant(kind: str, attrs: dict):
+    return _VARIANTS.from_attrs(kind, attrs)
+
+
+def _squash_symbol(attrs: dict) -> str:
+    return _variant("squash", attrs).c_symbol
+
+
+def _routing_symbol(attrs: dict) -> str:
+    """The routing kernel symbol, suffixed per non-default operator
+    variant (the ISLPED'22 approximate kernels are distinct entry
+    points, so the artifact documents exactly which arithmetic ran)."""
+    return ("capsnet_dynamic_routing_q7"
+            + _variant("softmax", attrs).c_suffix
+            + _variant("squash", attrs).c_suffix)
+
+
+def _variant_prototypes(program: EdgeProgram) -> list:
+    """Prototypes for non-default variant kernels the schedule calls
+    (deterministic: schedule order, deduped)."""
+    protos = []
+    for op in program.ops:
+        if op.kind == "PRIMARY_CAPS_Q7" \
+                and _variant("squash", op.attrs).c_suffix:
+            protos.append(_SQUASH_PROTO.format(
+                sym=_squash_symbol(op.attrs)))
+        elif op.kind == "CAPS_ROUTING_Q7":
+            sym = _routing_symbol(op.attrs)
+            if sym != "capsnet_dynamic_routing_q7":
+                protos.append(_ROUTING_PROTO.format(sym=sym))
+    if not protos:
+        return []
+    seen, out = set(), ["/* ISLPED'22 approximate-operator variants "
+                        "(repro.nn.variants) */"]
+    for p in protos:
+        if p not in seen:
+            seen.add(p)
+            out.append(p)
+    out.append("")
+    return out
 
 
 def _carray(name: str, arr: np.ndarray, ctype: str) -> str:
@@ -115,11 +170,11 @@ def _emit_op(op: EdgeOp, prog: EdgeProgram, plan: ArenaPlan) -> list:
         lines += _conv_call(op, prog, src, dst)
         n_caps, dim = out_t.shape
         lines.append(
-            f"    capsnet_squash_q7({dst}, {n_caps}, {dim}, "
+            f"    {_squash_symbol(a)}({dst}, {n_caps}, {dim}, "
             f"{p.upper()}_SQUASH_IN_FRAC, {p.upper()}_SQUASH_OUT_FRAC);")
     elif op.kind == "CAPS_ROUTING_Q7":
         lines += [
-            f"    capsnet_dynamic_routing_q7({src}, {p}_W, {a['num_out']},",
+            f"    {_routing_symbol(a)}({src}, {p}_W, {a['num_out']},",
             f"        {a['num_in']}, {a['out_dim']}, {a['in_dim']}, "
             f"{a['routings']},",
             f"        {p.upper()}_UHAT_SHIFT, {p.upper()}_LOGIT_FRAC, "
@@ -193,8 +248,9 @@ def emit_c(program: EdgeProgram, plan: ArenaPlan | None = None) -> dict:
                 c.append("")
         h.append("")
 
-    h += [_PROTOTYPES,
-          f"void {stem}_run(const q7_t *input, q7_t *output);", "",
+    h += [_PROTOTYPES]
+    h += _variant_prototypes(program)
+    h += [f"void {stem}_run(const q7_t *input, q7_t *output);", "",
           f"#endif /* {guard} */", ""]
 
     # ---------------- run function ----------------

@@ -21,6 +21,14 @@ from repro.nn.config import CapsNetConfig
 from repro.nn.pipeline import CapsPipeline, QuantCapsNet
 from repro.nn.plans import ConvPlan, PipelinePlan, PrimaryCapsPlan, \
     RoutingPlan
+from repro.nn.variants import REGISTRY as _VARIANTS
+
+
+def _impl(attrs: dict, kind: str) -> str:
+    """An op's variant reference, defaulted for pre-variant artifacts
+    (shared registry accessor); a tampered/unknown name is rejected
+    with the registered ones listed."""
+    return _VARIANTS.from_attrs(kind, attrs).name
 
 
 def _conv_plan(attrs: dict) -> ConvPlan:
@@ -71,7 +79,8 @@ def to_qnet(program: EdgeProgram) -> QuantCapsNet:
     per_channel = any("w_frac_per_channel" in op.attrs
                       for op in program.ops)
     pipeline = CapsPipeline.from_config(
-        cfg, softmax_impl=routing.attrs["softmax_impl"],
+        cfg, softmax_impl=_impl(routing.attrs, "softmax"),
+        squash_impl=_impl(routing.attrs, "squash"),
         per_channel=per_channel)
 
     plans, qweights = {}, {}
@@ -84,16 +93,18 @@ def to_qnet(program: EdgeProgram) -> QuantCapsNet:
             plans[layer.name] = _conv_plan(a)
         elif op.kind == "PRIMARY_CAPS_Q7":
             plans[layer.name] = PrimaryCapsPlan(
-                conv=_conv_plan(a), squash_out_frac=a["squash_out_frac"])
+                conv=_conv_plan(a), squash_out_frac=a["squash_out_frac"],
+                squash_impl=_impl(a, "squash"))
         else:
             plans[layer.name] = RoutingPlan(
                 uhat_shift=a["uhat_shift"], logit_frac=a["logit_frac"],
                 caps_out_shifts=tuple(a["caps_out_shifts"]),
                 caps_out_fracs=tuple(a["caps_out_fracs"]),
                 agree_shifts=tuple(a["agree_shifts"]),
-                softmax_impl=a["softmax_impl"], in_frac=a["in_frac"],
+                softmax_impl=_impl(a, "softmax"), in_frac=a["in_frac"],
                 W_frac=a["W_frac"], uhat_frac=a["uhat_frac"],
-                squash_out_frac=a["squash_out_frac"])
+                squash_out_frac=a["squash_out_frac"],
+                squash_impl=_impl(a, "squash"))
         qweights[layer.name] = {k: jnp.asarray(w)
                                 for k, w in op.weights.items()}
 

@@ -63,7 +63,8 @@ def lower(qnet: QuantCapsNet, name: str | None = None) -> EdgeProgram:
             attrs = _conv_attrs(conv, plan.conv)
             attrs.update(caps=layer.caps, dim=layer.dim,
                          squash_in_frac=plan.conv.out_frac,
-                         squash_out_frac=plan.squash_out_frac)
+                         squash_out_frac=plan.squash_out_frac,
+                         squash_impl=plan.squash_impl)
             out = new_tensor(f"{layer.name}.caps",
                              (h * w * layer.caps, layer.dim),
                              plan.squash_out_frac)
@@ -89,6 +90,7 @@ def lower(qnet: QuantCapsNet, name: str | None = None) -> EdgeProgram:
                 "agree_shifts": tuple(plan.agree_shifts),
                 "softmax_impl": plan.softmax_impl,
                 "squash_out_frac": plan.squash_out_frac,
+                "squash_impl": plan.squash_impl,
             }
             out = new_tensor(f"{layer.name}.v",
                              (layer.num_out, layer.out_dim),

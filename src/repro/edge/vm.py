@@ -2,29 +2,41 @@
 
 Executes the exported schedule with CMSIS-NN integer semantics — int8
 operands, int32 accumulation, power-of-two arithmetic shift, saturation
-to [-128, 127] — re-implemented here without jax so an artifact can be
-verified on any host, exactly the way the MCU kernels would run it.
+to [-128, 127] — in pure NumPy, exactly the way the MCU kernels would
+run it.  Softmax/squash operators are resolved through the
+operator-variant registry's NumPy faces (`repro.nn.variants`, the same
+single source of truth the jnp backends and the C emitter read), so a
+schedule naming an unregistered variant fails loudly with the
+registered names listed instead of silently mis-executing.
 
 Bit-exactness contract: for programs lowered from a `QuantCapsNet`,
 `EdgeVM(program).run(x_q)` equals `qnet.forward(x_q)` bit for bit, for
-both rounding modes and per-tensor or per-channel conv plans
-(tests/test_edge.py pins this for all paper configs).  The only
-non-integer operator is the beyond-paper "precise" softmax variant,
-which uses float32 like its jnp counterpart and is therefore matched in
-value but not guaranteed to the last bit.
+both rounding modes, per-tensor or per-channel conv plans, and every
+registered operator variant (tests/test_edge.py + tests/test_variants.py
+pin this).  The only non-integer operator is the beyond-paper "precise"
+softmax variant, which uses float32 like its jnp counterpart and is
+therefore matched in value but not guaranteed to the last bit.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.edge.program import EdgeOp, EdgeProgram
+from repro.nn.variants import REGISTRY as _VARIANTS
 
 INT8_MIN, INT8_MAX = -128, 127
-_SQUASH_GUARD_BITS = 10             # must match quant.int8_ops
+
+
+def _np_variant(kind: str, attrs: dict):
+    """Resolve an op's variant attr to its NumPy face (shared registry
+    accessor: defaults for pre-variant artifacts, raises with the
+    registered names listed for unknown ones)."""
+    return _VARIANTS.from_attrs(kind, attrs).np_q7
 
 
 # ---------------------------------------------------------------------------
-# integer primitives (NumPy mirrors of repro.quant.int8_ops)
+# integer primitives (NumPy mirrors of repro.quant.int8_ops; the
+# softmax/squash mirrors live with their variants in repro.nn.variants)
 # ---------------------------------------------------------------------------
 def _sat8(x):
     return np.clip(x, INT8_MIN, INT8_MAX).astype(np.int8)
@@ -64,50 +76,6 @@ def _conv2d_acc(x, w, stride: int):
                      w.astype(np.int32), dtype=np.int32)
 
 
-def _isqrt_newton(n):
-    """Vectorized Alg. 4 integer sqrt; mirrors int8_ops.isqrt_newton
-    (fixed 32 Newton steps with the monotonicity guard)."""
-    n = n.astype(np.int32)
-    x = np.maximum(n // 2, 1)
-    for _ in range(32):
-        nxt = (x + n // np.maximum(x, 1)) // 2
-        x = np.where(nxt < x, nxt, x)
-    return np.where(n <= 1, n, x)
-
-
-def _squash_q7(s, in_frac: int, out_frac: int):
-    s32 = s.astype(np.int32)
-    Q = np.sum(s32 * s32, axis=-1, keepdims=True, dtype=np.int32)
-    S = _isqrt_newton(Q)
-    P = _SQUASH_GUARD_BITS
-    shift = out_frac - in_frac + P
-    num = np.left_shift(S, shift) if shift >= 0 \
-        else np.right_shift(S, -shift)
-    den = (1 << in_frac) + np.right_shift(Q, in_frac)
-    ratio = num // np.maximum(den, 1)
-    v = np.right_shift(ratio * s32, P)
-    return _sat8(v)
-
-
-def _softmax_q7(x, in_frac: int):
-    x32 = x.astype(np.int32)
-    m = np.max(x32, axis=-1, keepdims=True)
-    e = np.maximum(np.right_shift(x32 - m, in_frac), -20)
-    p = np.left_shift(np.ones_like(e), 20 + e)
-    tot = np.sum(p, axis=-1, keepdims=True, dtype=np.int32)
-    c = np.left_shift(p, 7) // np.maximum(tot, 1)
-    return np.clip(c, 0, INT8_MAX).astype(np.int8)
-
-
-def _softmax_q7_precise(x, in_frac: int):
-    xf = x.astype(np.float32) * np.float32(2.0 ** -in_frac)
-    xf = xf - xf.max(axis=-1, keepdims=True)
-    p = np.exp(xf)
-    p = p / p.sum(axis=-1, keepdims=True)
-    c = np.round(p.astype(np.float32) * 128.0)
-    return np.clip(c, 0, INT8_MAX).astype(np.int8)
-
-
 def _add_q7(a, b):
     return _sat8(a.astype(np.int32) + b.astype(np.int32))
 
@@ -139,7 +107,8 @@ def _run_primary_caps(op: EdgeOp, x, rounding: str):
     a = op.attrs
     y = _run_conv(op, x, rounding, relu_override=False)
     u = y.reshape(y.shape[0], -1, a["dim"])
-    return _squash_q7(u, a["squash_in_frac"], a["squash_out_frac"])
+    return _np_variant("squash", a)(u, a["squash_in_frac"],
+                                    a["squash_out_frac"])
 
 
 def _run_routing(op: EdgeOp, u, rounding: str):
@@ -150,8 +119,8 @@ def _run_routing(op: EdgeOp, u, rounding: str):
     u_hat = _rshift_sat8(acc, a["uhat_shift"], rounding)
 
     out_frac = a["squash_out_frac"]
-    softmax = _softmax_q7 if a["softmax_impl"] == "q7" \
-        else _softmax_q7_precise
+    softmax = _np_variant("softmax", a)
+    squash = _np_variant("squash", a)
     b = np.zeros(u_hat.shape[:3], np.int8)
     v = None
     for r in range(a["routings"]):
@@ -159,7 +128,7 @@ def _run_routing(op: EdgeOp, u, rounding: str):
         acc = np.einsum("bji,bjio->bjo", c.astype(np.int32),
                         u_hat.astype(np.int32), dtype=np.int32)
         s_q = _rshift_sat8(acc, a["caps_out_shifts"][r], rounding)
-        v = _squash_q7(s_q, a["caps_out_fracs"][r], out_frac)
+        v = squash(s_q, a["caps_out_fracs"][r], out_frac)
         if r < a["routings"] - 1:
             acc = np.einsum("bjio,bjo->bji", u_hat.astype(np.int32),
                             v.astype(np.int32), dtype=np.int32)

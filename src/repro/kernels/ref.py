@@ -37,9 +37,10 @@ def routing_q7_ref(u_hat, num_iters: int, caps_out_shifts, caps_out_fracs,
 
     u_hat int8 [B, J, I, O] -> v int8 [B, J, O] (Q0.7).
     """
+    from repro.nn.variants import REGISTRY
     from repro.quant import int8_ops as q
     B, J, I, O = u_hat.shape
-    sm = q.softmax_q7 if softmax_impl == "q7" else q.softmax_q7_precise
+    sm = REGISTRY.get("softmax", softmax_impl).q7
     b = jnp.zeros((B, J, I), jnp.int8)
     v = None
     for r in range(num_iters):

@@ -14,6 +14,10 @@ then reloads the `.capsbin` from disk and re-verifies it in the NumPy
 q7 VM against the live model, bit for bit — export and proof in one
 command.  `--model` accepts a bare dataset name (mnist, smallnorb,
 cifar10, edge_tiny -> the @jnp spec) or a full registry id.
+`--softmax`/`--squash` export with an operator variant from the
+registry (repro.nn.variants; unknown names fail with the registered
+ones listed) — the variant references ride the `.capsbin` attrs and
+pick the matching C kernel symbols.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import argparse
 import sys
 
 from repro.edge import describe, format_export
+from repro.nn.variants import REGISTRY
 from repro.serving import ModelRegistry, default_specs
 
 
@@ -37,6 +42,13 @@ def main(argv=None) -> int:
     ap.add_argument("--per-channel", action="store_true",
                     help="per-output-channel conv weight formats "
                     "(ConvPlan.w_frac_per_channel)")
+    ap.add_argument("--softmax", choices=REGISTRY.names("softmax"),
+                    default=None,
+                    help="softmax operator variant (repro.nn.variants), "
+                    "e.g. the ISLPED'22 'approx'")
+    ap.add_argument("--squash", choices=REGISTRY.names("squash"),
+                    default=None,
+                    help="squash operator variant")
     ap.add_argument("--verify-n", type=int, default=4,
                     help="images for the bit-exact VM re-verification "
                     "(0 disables)")
@@ -48,15 +60,21 @@ def main(argv=None) -> int:
         print(f"[export_caps] unknown model {args.model!r}; have "
               f"{sorted(default_specs())}", file=sys.stderr)
         return 2
-    if args.rounding != "floor" or args.per_channel:
+    spec = registry.specs[model_id]
+    if args.rounding != "floor" or args.per_channel \
+            or args.softmax or args.squash:
         import dataclasses
-        spec = dataclasses.replace(registry.specs[model_id],
-                                   rounding=args.rounding,
-                                   per_channel=args.per_channel)
+        overrides = {f"{k}_impl": v
+                     for k, v in (("softmax", args.softmax),
+                                  ("squash", args.squash)) if v}
+        spec = dataclasses.replace(spec, rounding=args.rounding,
+                                   per_channel=args.per_channel,
+                                   **overrides)
         registry.register(spec)
 
     print(f"[export_caps] model={model_id} rounding={args.rounding} "
-          f"per_channel={args.per_channel} -> {args.out}")
+          f"per_channel={args.per_channel} variants={spec.variants.tag} "
+          f"-> {args.out}")
     try:
         result = registry.export(model_id, args.out, stem=args.stem,
                                  verify_n=args.verify_n)

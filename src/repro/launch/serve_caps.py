@@ -15,19 +15,27 @@ With --capsbin PATH the engine serves an exported MCU artifact instead:
 the `.capsbin` is imported back into a QuantCapsNet (repro.edge
 importer) and installed under its program name — the bits in flight are
 exactly the bits that shipped.
+
+--softmax/--squash select operator variants from the registry
+(repro.nn.variants; e.g. the ISLPED'22 approximate softmax/squash) —
+on a spec as a rebuilt ModelSpec, on a --capsbin artifact as a pure
+plan edit.  Unknown names fail argparse with the registered ones
+listed.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 
 from repro.launch.mesh import make_host_mesh
+from repro.nn.variants import REGISTRY, VariantSet
 from repro.serving import ModelRegistry, default_specs, serve_window
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mnist@jnp",
                     help=f"registry id ({', '.join(sorted(default_specs()))})"
@@ -35,6 +43,14 @@ def main():
     ap.add_argument("--capsbin", metavar="PATH", default=None,
                     help="serve an exported .capsbin artifact (imported "
                     "via repro.edge, installed under its program name)")
+    ap.add_argument("--softmax", choices=REGISTRY.names("softmax"),
+                    default=None,
+                    help="softmax operator variant (repro.nn.variants); "
+                    "default: the spec's / artifact's own")
+    ap.add_argument("--squash", choices=REGISTRY.names("squash"),
+                    default=None,
+                    help="squash operator variant; default: the spec's "
+                    "/ artifact's own")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--buckets", default="1,4,16,64",
                     help="comma-separated micro-batch bucket sizes")
@@ -48,7 +64,7 @@ def main():
                     help="also dump the served model as an MCU artifact "
                     "(.capsbin + manifest + .c/.h via repro.edge) and "
                     "print the flash/RAM report")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     # serving waves shard over BATCH=("pod","data"): give "data" the
     # devices (make_host_mesh fills the LAST axis; "model" would make the
@@ -61,13 +77,20 @@ def main():
     if args.capsbin:
         qnet = registry.install_artifact(args.capsbin)
         model_id = qnet.pipeline.cfg.name        # the program's name
+        if args.softmax or args.squash:          # plan edit on the artifact
+            vs = dataclasses.replace(
+                qnet.variants,
+                **{k: v for k, v in (("softmax", args.softmax),
+                                     ("squash", args.squash)) if v})
+            qnet = qnet.with_variants(vs)
+            registry.install(model_id, qnet)
         rng = np.random.default_rng(args.seed)
         images = rng.uniform(0, 1, (args.requests,)
                              + registry.input_shape(model_id)) \
             .astype(np.float32)
         print(f"[serve_caps] imported {args.capsbin} as {model_id!r} "
               f"({qnet.memory_bytes() / 1000:.1f} KB int8) "
-              f"buckets={buckets} "
+              f"variants={qnet.variants.tag} buckets={buckets} "
               f"mesh={'none' if mesh is None else dict(mesh.shape)}")
     else:
         model_id = args.model
@@ -75,9 +98,17 @@ def main():
             ap.error(f"unknown model {model_id!r}; have "
                      f"{sorted(registry.specs)} (or pass --capsbin)")
         spec = registry.specs[model_id]
+        if args.softmax or args.squash:
+            spec = dataclasses.replace(
+                spec,
+                **{f"{k}_impl": v for k, v in (("softmax", args.softmax),
+                                               ("squash", args.squash))
+                   if v})
+            registry.register(spec)
         images = spec.images(args.requests, args.seed)
         print(f"[serve_caps] model={model_id} ({spec.config.name}, "
-              f"backend={spec.backend}) buckets={buckets} "
+              f"backend={spec.backend}, variants={spec.variants.tag}) "
+              f"buckets={buckets} "
               f"mesh={'none' if mesh is None else dict(mesh.shape)}")
         t0 = time.perf_counter()
         registry.model(model_id)
@@ -95,6 +126,9 @@ def main():
     print("[serve_caps]", engine.metrics.report())
     print(f"[serve_caps] executables compiled: {registry.compile_count}, "
           f"cache hits: {registry.exec_hits}")
+    if registry.variant_fallbacks:
+        print(f"[serve_caps] pallas->oracle variant fallbacks: "
+              f"{registry.variant_fallbacks}")
     if args.compare_b1:
         b1_engine, b1_wall = serve_window(registry, (1,), images, model_id)
         print("[serve_caps] b1  :", b1_engine.metrics.report())

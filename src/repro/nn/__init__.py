@@ -9,3 +9,6 @@ from repro.nn.layers import (CapsLayer, CapsuleRouting,  # noqa: F401
 from repro.nn.pipeline import CapsPipeline, QuantCapsNet  # noqa: F401
 from repro.nn.plans import (ConvPlan, PipelinePlan,  # noqa: F401
                             PrimaryCapsPlan, RoutingPlan, TapStats)
+from repro.nn.variants import (REGISTRY, OpVariant,  # noqa: F401
+                               VariantRegistry, VariantSet,
+                               all_variant_sets)

@@ -2,18 +2,29 @@
 
 `jnp`    — the pure-jnp oracle semantics from repro.quant.int8_ops: the
            bit-exact reference every other backend must reproduce.
+           Operator variants (softmax/squash, see repro.nn.variants) are
+           resolved through the variant registry, never by string
+           comparison here.
 `pallas` — the TPU kernels from repro.kernels: Pallas squash and the
            FUSED routing kernel (u_hat resident in VMEM, DESIGN §7).
-           Falls back to the oracle loop for the "precise" softmax
-           variant, which the fused kernel does not implement.
+           The fused kernels implement only the default ("q7" softmax,
+           "exact" squash, Q0.7 output) plan; any other variant falls
+           back to the oracle loop — bit-identically, but observably:
+           every fallback decision increments `PallasBackend.fallbacks`
+           and warns once per (op, variant) (no more silent degradation;
+           the serving registry adds the per-model warning).
 
-Both backends are bit-identical on the default ("q7") plan — the fused
-kernel is a perf change, not a semantics change (tests/test_kernels.py).
+Both backends are bit-identical on every plan — the fused kernel is a
+perf change, not a semantics change (tests/test_kernels.py).
 """
 from __future__ import annotations
 
+import collections
+import warnings
+
 import jax.numpy as jnp
 
+from repro.nn.variants import REGISTRY
 from repro.quant import int8_ops as q
 
 
@@ -37,13 +48,14 @@ class JnpBackend:
     def relu_q7(self, x):
         return q.relu_q7(x)
 
-    def squash_q7(self, s, *, in_frac, out_frac=7):
-        return q.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
+    def squash_q7(self, s, *, in_frac, out_frac=7, impl=None):
+        impl = impl or REGISTRY.default("squash")
+        return REGISTRY.get("squash", impl).q7(s, in_frac=in_frac,
+                                               out_frac=out_frac)
 
-    def softmax_q7(self, x, *, in_frac, impl="q7"):
-        if impl == "precise":
-            return q.softmax_q7_precise(x, in_frac)
-        return q.softmax_q7(x, in_frac)
+    def softmax_q7(self, x, *, in_frac, impl=None):
+        impl = impl or REGISTRY.default("softmax")
+        return REGISTRY.get("softmax", impl).q7(x, in_frac)
 
     def uhat_q7(self, W, u, *, shift, rounding):
         """calc_inputs_hat: W int8 [J,I,O,D] x u int8 [B,I,D] -> int8
@@ -63,7 +75,8 @@ class JnpBackend:
                              u_hat.astype(jnp.int32))
             s_q = q.rshift_sat8(acc, plan.caps_out_shifts[r], rounding)
             v = self.squash_q7(s_q, in_frac=plan.caps_out_fracs[r],
-                               out_frac=plan.out_frac)
+                               out_frac=plan.out_frac,
+                               impl=plan.squash_impl)
             if r < plan.routings - 1:
                 acc = jnp.einsum("bjio,bjo->bji", u_hat.astype(jnp.int32),
                                  v.astype(jnp.int32))
@@ -76,6 +89,13 @@ class JnpBackend:
         return v
 
 
+# the fallback target for PallasBackend: a plain oracle instance, so a
+# routing-level fallback runs the WHOLE loop on oracle ops and records
+# exactly one counter entry per fallback decision (re-entering the
+# pallas squash_q7 from inside the oracle loop would double-count)
+_JNP_ORACLE = JnpBackend()
+
+
 class PallasBackend(JnpBackend):
     """TPU-kernel backend (interpret mode on CPU): Pallas squash + the
     fused routing kernel.  Convs stay on the XLA int8 conv (the MXU path
@@ -83,14 +103,41 @@ class PallasBackend(JnpBackend):
 
     name = "pallas"
 
-    def squash_q7(self, s, *, in_frac, out_frac=7):
+    def __init__(self):
+        # (op, variant) -> number of fallback DECISIONS (one per trace /
+        # direct call, not per served image) — the observable counter
+        # the silent-degradation satellite asks for
+        self.fallbacks: collections.Counter = collections.Counter()
+        self._warned: set = set()
+
+    def _fallback(self, op: str, variant: str):
+        self.fallbacks[(op, variant)] += 1
+        if (op, variant) not in self._warned:
+            self._warned.add((op, variant))
+            warnings.warn(
+                f"pallas backend has no fused {op} kernel for variant "
+                f"{variant!r}; falling back to the jnp oracle "
+                "(bit-identical, slower)", RuntimeWarning, stacklevel=3)
+
+    def squash_q7(self, s, *, in_frac, out_frac=7, impl=None):
+        impl = impl or REGISTRY.default("squash")
+        if impl != REGISTRY.default("squash"):
+            self._fallback("squash", impl)
+            return super().squash_q7(s, in_frac=in_frac, out_frac=out_frac,
+                                     impl=impl)
         from repro.kernels import ops as kops
         return kops.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
 
     def routing_q7(self, u_hat, plan, *, rounding):
-        # the fused kernel implements only the "q7" softmax and the Q0.7
-        # squash output; other plan variants take the oracle loop
-        if plan.softmax_impl != "q7" or plan.out_frac != 7:
+        # the fused kernel implements only the default variants and the
+        # Q0.7 squash output; other plans take the oracle loop
+        if plan.softmax_impl != REGISTRY.default("softmax"):
+            self._fallback("routing.softmax", plan.softmax_impl)
+            return _JNP_ORACLE.routing_q7(u_hat, plan, rounding=rounding)
+        if plan.squash_impl != REGISTRY.default("squash"):
+            self._fallback("routing.squash", plan.squash_impl)
+            return _JNP_ORACLE.routing_q7(u_hat, plan, rounding=rounding)
+        if plan.out_frac != 7:
             return super().routing_q7(u_hat, plan, rounding=rounding)
         from repro.kernels import ops as kops
         return kops.routing_q7(

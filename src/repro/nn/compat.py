@@ -13,6 +13,7 @@ import re
 
 from repro.nn.plans import (ConvPlan, PipelinePlan, PrimaryCapsPlan,
                             RoutingPlan)
+from repro.nn.variants import REGISTRY as _VARIANTS
 
 # tap name -> legacy trace key (and the reverse renames, for stats)
 _TAP_RULES = (
@@ -102,7 +103,11 @@ def pcap_plan_from_shifts(shifts: dict) -> PrimaryCapsPlan:
 
 
 def routing_plan_from_shifts(shifts: dict, routings: int,
-                             softmax_impl: str = "q7") -> RoutingPlan:
+                             softmax_impl: str | None = None) -> RoutingPlan:
+    # the legacy table has no variant columns: default from the registry
+    # (never a literal here, so the shims cannot drift from the typed path)
+    softmax_impl = _VARIANTS.validate(
+        "softmax", softmax_impl or _VARIANTS.default("softmax"))
     return RoutingPlan(
         uhat_shift=shifts["uhat_shift"],
         logit_frac=shifts["logit_frac"],
@@ -118,7 +123,7 @@ def routing_plan_from_shifts(shifts: dict, routings: int,
 
 
 def shifts_to_plan(shifts: dict, num_convs: int, routings: int,
-                   softmax_impl: str = "q7") -> PipelinePlan:
+                   softmax_impl: str | None = None) -> PipelinePlan:
     """Full legacy shift table -> PipelinePlan (for the forward shim)."""
     layers: dict = {}
     f_act = shifts.get("input_frac", 7)   # execution never reads in_frac

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.core.routing import squash
 from repro.nn.backend import get_backend
 from repro.nn.plans import ConvPlan, PrimaryCapsPlan, RoutingPlan, TapStats
+from repro.nn.variants import DEFAULT_SOFTMAX, DEFAULT_SQUASH, REGISTRY
 from repro.quant import qformat as qf
 
 
@@ -173,6 +174,7 @@ class PrimaryCaps:
     caps: int
     dim: int
     per_channel: bool = False
+    squash_impl: str = DEFAULT_SQUASH   # variant default carried into plan
 
     @property
     def out_ch(self) -> int:
@@ -196,7 +198,8 @@ class PrimaryCaps:
         return self.conv.plan_tap_names()
 
     def plan(self, params, stats: TapStats, in_frac: int) -> PrimaryCapsPlan:
-        return PrimaryCapsPlan(conv=self.conv.plan(params, stats, in_frac))
+        return PrimaryCapsPlan(conv=self.conv.plan(params, stats, in_frac),
+                               squash_impl=self.squash_impl)
 
     def quantize(self, params, plan: PrimaryCapsPlan) -> dict:
         return self.conv.quantize(params, plan.conv)
@@ -207,12 +210,14 @@ class PrimaryCaps:
                              rounding=rounding)
         u = y.reshape(y.shape[0], -1, self.dim)
         return get_backend(backend).squash_q7(
-            u, in_frac=plan.conv.out_frac, out_frac=plan.squash_out_frac)
+            u, in_frac=plan.conv.out_frac, out_frac=plan.squash_out_frac,
+            impl=plan.squash_impl)
 
     def fwd_fq(self, params, plan: PrimaryCapsPlan, x, *, rounding="floor"):
         y = self.conv.fwd_fq(params, plan.conv, x, rounding=rounding)
-        u = squash(y.reshape(y.shape[0], -1, self.dim), axis=-1)
-        return qf.fake_quant(u, plan.squash_out_frac, rounding)
+        u = y.reshape(y.shape[0], -1, self.dim)
+        return REGISTRY.get("squash", plan.squash_impl).fq(
+            u, plan.squash_out_frac, rounding)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,7 +230,8 @@ class CapsuleRouting:
     out_dim: int                    # O
     in_dim: int                     # D
     routings: int = 3
-    softmax_impl: str = "q7"        # default carried into the plan
+    softmax_impl: str = DEFAULT_SOFTMAX   # variant defaults carried into
+    squash_impl: str = DEFAULT_SQUASH     # the plan (registry-validated)
 
     def init(self, key) -> dict:
         return {"W": jax.random.normal(
@@ -276,7 +282,7 @@ class CapsuleRouting:
             caps_out_fracs=f_s,
             agree_shifts=tuple(qf.out_shift(f_uhat, 7, f_logit)
                                for _ in range(self.routings - 1)),
-            softmax_impl=self.softmax_impl,
+            softmax_impl=self.softmax_impl, squash_impl=self.squash_impl,
             in_frac=in_frac, W_frac=f_W, uhat_frac=f_uhat)
 
     def quantize(self, params, plan: RoutingPlan) -> dict:
@@ -291,28 +297,19 @@ class CapsuleRouting:
 
     @staticmethod
     def _softmax_fq(b, impl: str):
-        """Couplings in Q0.7 the way the int8 graph computes them.  For
-        the "q7" (arm_softmax-style) variant the forward is the same
-        powers-of-two-of-floor(x-max) approximation as
-        `int8_ops.softmax_q7` — the routing loop's coarsest operator,
-        which QAT must train against — with the float softmax as the
-        straight-through gradient surrogate."""
-        sm = jax.nn.softmax(b, axis=1)
-        if impl != "q7":                         # "precise" variant
-            return qf.fake_quant(sm, 7)
-        e = jnp.maximum(jnp.floor(b - jnp.max(b, axis=1, keepdims=True)),
-                        -20.0)
-        p = jnp.exp2(e)
-        c = jnp.clip(jnp.floor(p * 128.0 / jnp.sum(p, axis=1,
-                                                   keepdims=True)),
-                     0.0, 127.0) / 128.0
-        return sm + jax.lax.stop_gradient(c - sm)
+        """Couplings in Q0.7 the way the int8 graph computes them — the
+        registered variant's fake-quant face (repro.nn.variants): the
+        variant's forward approximation with the float softmax as the
+        straight-through gradient surrogate.  Kept as a method so QAT
+        code can probe one softmax face in isolation."""
+        return REGISTRY.get("softmax", impl).fq(b)
 
     def fwd_fq(self, params, plan: RoutingPlan, u, *, rounding="floor"):
         """Fake-quant routing: u_hat, couplings, per-iteration s/v and
         the accumulated logits all snap to the grids routing_q7 uses
-        (couplings via the plan's softmax_impl, like the backends; the
-        logit clamp models add_q7's int8 saturation)."""
+        (couplings and squash via the plan's variant references, like
+        the backends; the logit clamp models add_q7's int8 saturation)."""
+        sq = REGISTRY.get("squash", plan.squash_impl)
         W = qf.fake_quant(params["W"], plan.W_frac)
         u_hat = qf.fake_quant(jnp.einsum("jiod,bid->bjio", W, u),
                               plan.uhat_frac, rounding)
@@ -322,8 +319,7 @@ class CapsuleRouting:
             c = self._softmax_fq(b, plan.softmax_impl)
             s = qf.fake_quant(jnp.einsum("bji,bjio->bjo", c, u_hat),
                               plan.caps_out_fracs[r], rounding)
-            v = qf.fake_quant(squash(s, axis=-1), plan.squash_out_frac,
-                              rounding)
+            v = sq.fq(s, plan.squash_out_frac, rounding)
             if r < self.routings - 1:
                 a = qf.fake_quant(jnp.einsum("bjio,bjo->bji", u_hat, v),
                                   plan.logit_frac, rounding)

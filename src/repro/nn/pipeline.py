@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.nn.config import CapsNetConfig
 from repro.nn.layers import CapsuleRouting, PrimaryCaps, QuantConv2D
 from repro.nn.plans import PipelinePlan, TapStats, plan_scalars
+from repro.nn.variants import VariantSet
 from repro.quant import qformat as qf
 
 
@@ -32,8 +33,25 @@ class CapsPipeline:
     # construction
     # ------------------------------------------------------------------
     @classmethod
-    def from_config(cls, cfg: CapsNetConfig, softmax_impl: str = "q7",
-                    per_channel: bool = False) -> "CapsPipeline":
+    def from_config(cls, cfg: CapsNetConfig, softmax_impl: str | None = None,
+                    per_channel: bool = False,
+                    squash_impl: str | None = None,
+                    variants: VariantSet | None = None) -> "CapsPipeline":
+        """Build the typed pipeline for a geometry config.
+
+        Operator variants come from the registry (repro.nn.variants):
+        pass a whole `variants=VariantSet(...)`, or the individual
+        `softmax_impl=` / `squash_impl=` names (unknown names raise with
+        the registered ones listed).  Omitted -> registry defaults."""
+        if variants is None:
+            variants = VariantSet(
+                **{k: v for k, v in (("softmax", softmax_impl),
+                                     ("squash", squash_impl))
+                   if v is not None})
+        elif softmax_impl is not None or squash_impl is not None:
+            raise ValueError(
+                "pass either variants= or softmax_impl=/squash_impl=, "
+                "not both")
         layers = []
         cin = cfg.input_shape[2]
         for i, (f, k, s) in enumerate(zip(cfg.conv_filters, cfg.conv_kernels,
@@ -43,10 +61,12 @@ class CapsPipeline:
             cin = f
         layers.append(PrimaryCaps("pcap", cfg.pcap_kernel, cfg.pcap_stride,
                                   cin, cfg.pcap_caps, cfg.pcap_dim,
-                                  per_channel=per_channel))
+                                  per_channel=per_channel,
+                                  squash_impl=variants.squash))
         layers.append(CapsuleRouting(
             "caps", cfg.num_classes, cfg.num_input_caps, cfg.caps_dim,
-            cfg.pcap_dim, cfg.routings, softmax_impl=softmax_impl))
+            cfg.pcap_dim, cfg.routings, softmax_impl=variants.softmax,
+            squash_impl=variants.squash))
         return cls(cfg=cfg, layers=tuple(layers))
 
     def layer(self, name: str):
@@ -196,13 +216,24 @@ class QuantCapsNet:
     def with_backend(self, backend: str) -> "QuantCapsNet":
         return dataclasses.replace(self, backend=backend)
 
+    @property
+    def variants(self) -> VariantSet:
+        """The operator-variant selection the plan carries."""
+        return self.plan.variants
+
+    def with_variants(self, variants: VariantSet) -> "QuantCapsNet":
+        """Return a model running `variants` — a pure plan edit (weights
+        and shifts untouched; variant choices never affect Alg. 7's
+        weight quantization), applied to every variant-bearing layer
+        plan in the pipeline (deeper stacks may have several)."""
+        return dataclasses.replace(self, plan=variants.apply(self.plan))
+
     def with_softmax(self, impl: str) -> "QuantCapsNet":
-        """Return a model whose routing layers use `impl` softmax — a plan
-        edit, not a method patch.  Applies to every RoutingPlan in the
-        pipeline (deeper stacks may have several)."""
-        from repro.nn.plans import RoutingPlan
-        layers = {name: dataclasses.replace(p, softmax_impl=impl)
-                  if isinstance(p, RoutingPlan) else p
-                  for name, p in self.plan.layers.items()}
-        return dataclasses.replace(
-            self, plan=dataclasses.replace(self.plan, layers=layers))
+        """Softmax-only plan edit (see with_variants)."""
+        return self.with_variants(
+            dataclasses.replace(self.variants, softmax=impl))
+
+    def with_squash(self, impl: str) -> "QuantCapsNet":
+        """Squash-only plan edit (see with_variants)."""
+        return self.with_variants(
+            dataclasses.replace(self.variants, squash=impl))

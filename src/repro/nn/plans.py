@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.nn import variants as _variants
+
 
 @dataclasses.dataclass(frozen=True)
 class TapStats:
@@ -56,9 +58,19 @@ class ConvPlan:
 
 @dataclasses.dataclass(frozen=True)
 class PrimaryCapsPlan:
-    """conv plan + the integer squash that lands capsules in Q0.7."""
+    """conv plan + the integer squash that lands capsules in Q0.7.
+
+    `squash_impl` is a validated reference into the operator-variant
+    registry (`repro.nn.variants`): construction rejects unknown names,
+    so a plan — whether built by `plan()`, read back from QAT's JSON
+    side-car, or imported from a `.capsbin` — can only ever name a
+    squash the backends, the EdgeVM, and the C emitter all implement."""
     conv: ConvPlan
     squash_out_frac: int = 7
+    squash_impl: str = _variants.DEFAULT_SQUASH
+
+    def __post_init__(self):
+        _variants.REGISTRY.validate("squash", self.squash_impl)
 
     @property
     def out_frac(self) -> int:
@@ -78,11 +90,16 @@ class RoutingPlan:
     agree_shifts: tuple              # derived for a Q0.7 squash output;
     #                                  backends add (out_frac - 7) when
     #                                  squash_out_frac is edited
-    softmax_impl: str = "q7"        # "q7" (arm_softmax-style) | "precise"
+    softmax_impl: str = _variants.DEFAULT_SOFTMAX   # registry reference
     in_frac: int = 7                # post-squash capsules are Q0.7
     W_frac: int = 0                 # bookkeeping for requantization/export
     uhat_frac: int = 0
     squash_out_frac: int = 7        # Q0.7 default; a plan edit, like softmax
+    squash_impl: str = _variants.DEFAULT_SQUASH     # registry reference
+
+    def __post_init__(self):
+        _variants.REGISTRY.validate("softmax", self.softmax_impl)
+        _variants.REGISTRY.validate("squash", self.squash_impl)
 
     @property
     def routings(self) -> int:
@@ -102,6 +119,12 @@ class PipelinePlan:
 
     def __getitem__(self, name: str):
         return self.layers[name]
+
+    @property
+    def variants(self) -> "_variants.VariantSet":
+        """The operator-variant selection this plan carries (one softmax
+        + one squash reference; see repro.nn.variants.VariantSet)."""
+        return _variants.VariantSet.of_plan(self)
 
 
 _PLAN_KINDS = {}                      # class name -> plan dataclass
@@ -144,13 +167,16 @@ def plan_from_json(d: dict):
     cls = _PLAN_KINDS[kind]
     kw = {}
     for f in dataclasses.fields(cls):
+        if f.name not in d:
+            continue        # field added after this JSON was written:
+            #                 fall back to the dataclass default
         v = d[f.name]
         if isinstance(v, dict) and "kind" in v:
             v = plan_from_json(v)
         elif isinstance(v, list):
             v = tuple(v)
         kw[f.name] = v
-    return cls(**kw)
+    return cls(**kw)        # variant references re-validate in __post_init__
 
 
 def plan_scalars(plan) -> int:

@@ -1,0 +1,453 @@
+"""First-class operator variants: a typed registry spanning PTQ -> QAT ->
+serving -> edge.
+
+The paper's edge story hinges on swapping capsule operators for cheaper
+integer variants, and the ISLPED'22 follow-up ("Enabling Capsule Networks
+at the Edge through Approximate Softmax and Squash Operations") makes the
+softmax/squash choice the next latency lever.  Before this module that
+choice was a bare ``softmax_impl: str`` hand-copied through ~10 call
+sites; now a variant is ONE registration here and every consumer — the
+jnp/pallas backends, the fake-quant QAT face, ``edge.lower``/``EdgeVM``/
+``emit_c``, the serving registry, both CLIs — resolves it through the
+same `VariantRegistry`.
+
+An `OpVariant` carries every face one operator variant needs:
+
+  q7      jnp int8 oracle (the semantics `fwd_q7` executes; bit-exact
+          contract with `np_q7`)
+  np_q7   pure-NumPy mirror (what `EdgeVM` runs — and what the MCU
+          kernels must reproduce)
+  fq      fake-quant face (QAT trains against the variant's forward with
+          a straight-through gradient; see `CapsLayer.fwd_fq`)
+  f32     plain float math of the variant (A/B studies; the pipeline's
+          `fwd_f32` calibration reference intentionally stays the exact
+          float model)
+
+plus the plan-field schema (`plan_field` — which typed-plan field carries
+the reference) and the C-emitter lowering attrs (`c_symbol`, `c_suffix`).
+Plan fields remain plain strings — JSON- and ``.capsbin``-safe by
+construction — but they are now *validated references*: the plan
+dataclasses, `plan_from_json`, the ``.capsbin`` importer, and the CLIs
+all reject unknown names with the registered ones listed.
+
+Registered variants:
+
+  softmax  "q7"       arm_softmax-style shift softmax (paper baseline)
+           "precise"  dequantize -> fp32 softmax -> requant (beyond-paper)
+           "approx"   ISLPED'22: powers-of-two probabilities with a
+                      power-of-two normalizer — the per-element integer
+                      division becomes one arithmetic shift
+  squash   "exact"    Eq. 8 with Alg. 4 Newton-Raphson integer sqrt
+           "approx"   ISLPED'22: the L2 norm is replaced by the L-inf
+                      norm max|s_i| — no square root at all
+
+`VariantSet` is the pipeline-level selection (one softmax + one squash)
+that attaches to a `PipelinePlan`: build with
+``CapsPipeline.from_config(cfg, variants=VariantSet(...))``, edit a
+quantized model with ``QuantCapsNet.with_variants`` (a pure plan edit),
+and read it back from any plan via ``PipelinePlan.variants``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_INT8_MIN, _INT8_MAX = -128, 127
+_SQUASH_GUARD_BITS = 10             # must match quant.int8_ops
+_EXP_FLOOR = -20                    # exponent clamp shared by softmaxes
+
+
+# ---------------------------------------------------------------------------
+# NumPy faces (the EdgeVM semantics; no jax anywhere in this block)
+# ---------------------------------------------------------------------------
+def _np_sat8(x):
+    return np.clip(x, _INT8_MIN, _INT8_MAX).astype(np.int8)
+
+
+def _np_ceil_log2(tot):
+    """ceil(log2(tot)) for positive int32 arrays, integer-only (bit
+    length of tot-1) so jnp and NumPy cannot disagree on boundaries."""
+    t1 = tot.astype(np.int32) - 1
+    k = np.zeros_like(t1)
+    for j in range(31):
+        k = k + (np.right_shift(t1, j) > 0)
+    return k
+
+
+def _np_softmax_q7(x, in_frac: int):
+    x32 = x.astype(np.int32)
+    m = np.max(x32, axis=-1, keepdims=True)
+    e = np.maximum(np.right_shift(x32 - m, in_frac), _EXP_FLOOR)
+    p = np.left_shift(np.ones_like(e), 20 + e)
+    tot = np.sum(p, axis=-1, keepdims=True, dtype=np.int32)
+    c = np.left_shift(p, 7) // np.maximum(tot, 1)
+    return np.clip(c, 0, _INT8_MAX).astype(np.int8)
+
+
+def _np_softmax_q7_precise(x, in_frac: int):
+    xf = x.astype(np.float32) * np.float32(2.0 ** -in_frac)
+    xf = xf - xf.max(axis=-1, keepdims=True)
+    p = np.exp(xf)
+    p = p / p.sum(axis=-1, keepdims=True)
+    c = np.round(p.astype(np.float32) * 128.0)
+    return np.clip(c, 0, _INT8_MAX).astype(np.int8)
+
+
+def _np_softmax_q7_approx(x, in_frac: int):
+    """ISLPED'22 shift softmax: 2^floor(x-max) probabilities normalized
+    by 2^ceil(log2(sum)) — division-free (one shift per element)."""
+    x32 = x.astype(np.int32)
+    m = np.max(x32, axis=-1, keepdims=True)
+    e = np.maximum(np.right_shift(x32 - m, in_frac), _EXP_FLOOR)
+    p = np.left_shift(np.ones_like(e), 20 + e)
+    tot = np.sum(p, axis=-1, keepdims=True, dtype=np.int32)
+    k = _np_ceil_log2(tot)                   # >= 20: the max term is 2^20
+    c = np.right_shift(p, k - 7)
+    return np.clip(c, 0, _INT8_MAX).astype(np.int8)
+
+
+def _np_isqrt_newton(n):
+    n = n.astype(np.int32)
+    x = np.maximum(n // 2, 1)
+    for _ in range(32):
+        nxt = (x + n // np.maximum(x, 1)) // 2
+        x = np.where(nxt < x, nxt, x)
+    return np.where(n <= 1, n, x)
+
+
+def _np_squash_factor(S, Q, in_frac: int, out_frac: int):
+    """Eq. 8 ratio on a (norm, norm^2) pair; shared by both variants."""
+    P = _SQUASH_GUARD_BITS
+    shift = out_frac - in_frac + P
+    num = np.left_shift(S, shift) if shift >= 0 \
+        else np.right_shift(S, -shift)
+    den = (1 << in_frac) + np.right_shift(Q, in_frac)
+    return num // np.maximum(den, 1)
+
+
+def _np_squash_q7(s, in_frac: int, out_frac: int = 7):
+    s32 = s.astype(np.int32)
+    Q = np.sum(s32 * s32, axis=-1, keepdims=True, dtype=np.int32)
+    ratio = _np_squash_factor(_np_isqrt_newton(Q), Q, in_frac, out_frac)
+    return _np_sat8(np.right_shift(ratio * s32, _SQUASH_GUARD_BITS))
+
+
+def _np_squash_q7_approx(s, in_frac: int, out_frac: int = 7):
+    """ISLPED'22 approximate squash: the L2 norm (32-iteration Newton
+    isqrt, Alg. 4) is replaced by the L-inf norm max|s_i| — no sqrt."""
+    s32 = s.astype(np.int32)
+    M = np.max(np.abs(s32), axis=-1, keepdims=True)
+    ratio = _np_squash_factor(M, M * M, in_frac, out_frac)
+    return _np_sat8(np.right_shift(ratio * s32, _SQUASH_GUARD_BITS))
+
+
+# ---------------------------------------------------------------------------
+# jnp faces (int8 oracle + fake-quant; jax imported lazily so importing
+# the registry never forces it)
+# ---------------------------------------------------------------------------
+def _q7_softmax(x, in_frac: int):
+    from repro.quant import int8_ops as q
+    return q.softmax_q7(x, in_frac)
+
+
+def _q7_softmax_precise(x, in_frac: int):
+    from repro.quant import int8_ops as q
+    return q.softmax_q7_precise(x, in_frac)
+
+
+def _q7_softmax_approx(x, in_frac: int):
+    from repro.quant import int8_ops as q
+    return q.softmax_q7_approx(x, in_frac)
+
+
+def _q7_squash(s, in_frac: int, out_frac: int = 7):
+    from repro.quant import int8_ops as q
+    return q.squash_q7(s, in_frac=in_frac, out_frac=out_frac)
+
+
+def _q7_squash_approx(s, in_frac: int, out_frac: int = 7):
+    from repro.quant import int8_ops as q
+    return q.squash_q7_approx(s, in_frac=in_frac, out_frac=out_frac)
+
+
+def _f32_softmax(b, axis: int = -1):
+    import jax
+    return jax.nn.softmax(b, axis=axis)
+
+
+def _f32_softmax_approx(b, axis: int = -1):
+    """Float math of the shift softmax (dequantized semantics)."""
+    import jax.numpy as jnp
+    e = jnp.maximum(jnp.floor(b - jnp.max(b, axis=axis, keepdims=True)),
+                    float(_EXP_FLOOR))
+    p = jnp.exp2(e)
+    t = jnp.sum(p, axis=axis, keepdims=True)
+    return p * jnp.exp2(-_f32_ceil_log2(t))
+
+
+def _f32_ceil_log2(t):
+    """ceil(log2(t)) on floats by counting powers of two strictly below
+    t (t in [2^-20, 2^30)).  Used by the FLOAT face only: exact for the
+    value `t` it is handed, but a float32 normalizer sum can itself
+    round across a power-of-two boundary — the fake-quant face therefore
+    mirrors the integer op's int32 sum + `ceil_log2_int` instead."""
+    import jax.numpy as jnp
+    K = jnp.full_like(t, float(_EXP_FLOOR - 1))
+    for j in range(_EXP_FLOOR - 1, 31):
+        K = K + (t > 2.0 ** j)
+    return K
+
+
+def _f32_squash(s):
+    from repro.core.routing import squash
+    return squash(s, axis=-1)
+
+
+def _f32_squash_approx(s):
+    import jax.numpy as jnp
+    M = jnp.max(jnp.abs(s), axis=-1, keepdims=True)
+    return s * M / (1.0 + M * M)
+
+
+# fake-quant faces.  Softmax fq takes the routing logits [B, J, I] and
+# returns couplings over axis=1 (the convention of the routing loop's
+# QAT face); the float softmax is always the straight-through surrogate.
+def _fq_softmax_q7(b):
+    import jax
+    import jax.numpy as jnp
+    sm = jax.nn.softmax(b, axis=1)
+    e = jnp.maximum(jnp.floor(b - jnp.max(b, axis=1, keepdims=True)),
+                    float(_EXP_FLOOR))
+    p = jnp.exp2(e)
+    c = jnp.clip(jnp.floor(p * 128.0 / jnp.sum(p, axis=1, keepdims=True)),
+                 0.0, 127.0) / 128.0
+    return sm + jax.lax.stop_gradient(c - sm)
+
+
+def _fq_softmax_precise(b):
+    import jax
+    from repro.quant import qformat as qf
+    return qf.fake_quant(jax.nn.softmax(b, axis=1), 7)
+
+
+def _fq_softmax_approx(b):
+    import jax
+    import jax.numpy as jnp
+    from repro.quant.int8_ops import ceil_log2_int
+    sm = jax.nn.softmax(b, axis=1)
+    e = jnp.maximum(jnp.floor(b - jnp.max(b, axis=1, keepdims=True)),
+                    float(_EXP_FLOOR))
+    # the normalizer exponent must be computed EXACTLY like the integer
+    # op's (sum of int32 powers of two + integer ceil-log2): a float32
+    # sum of exp2(e) loses the tail once >=16 logits tie at the max and
+    # would round K across a power-of-two boundary, silently diverging
+    # from the deployed arithmetic (everything here sits behind the STE
+    # stop_gradient, so integer ops are gradient-safe)
+    p_int = jnp.exp2(e - float(_EXP_FLOOR)).astype(jnp.int32)
+    k = ceil_log2_int(jnp.sum(p_int, axis=1, keepdims=True))
+    K = (k + _EXP_FLOOR).astype(jnp.float32)
+    c = jnp.clip(jnp.floor(jnp.exp2(e - K) * 128.0), 0.0, 127.0) / 128.0
+    return sm + jax.lax.stop_gradient(c - sm)
+
+
+# Squash fq faces: float math of the variant snapped onto the plan's
+# output grid (same STE pattern the layers already used for "exact").
+def _fq_squash(s, out_frac: int, rounding: str = "floor"):
+    from repro.quant import qformat as qf
+    return qf.fake_quant(_f32_squash(s), out_frac, rounding)
+
+
+def _fq_squash_approx(s, out_frac: int, rounding: str = "floor"):
+    from repro.quant import qformat as qf
+    return qf.fake_quant(_f32_squash_approx(s), out_frac, rounding)
+
+
+# ---------------------------------------------------------------------------
+# the typed spec + registry
+# ---------------------------------------------------------------------------
+KINDS = ("softmax", "squash")
+PLAN_FIELDS = {"softmax": "softmax_impl", "squash": "squash_impl"}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpVariant:
+    """One operator variant: every face + the lowering attrs it needs."""
+    name: str                       # registry key within its kind
+    kind: str                       # "softmax" | "squash"
+    description: str
+    q7: callable                    # jnp int8 oracle
+    np_q7: callable                 # NumPy mirror (EdgeVM / MCU contract)
+    fq: callable                    # fake-quant (QAT) face
+    f32: callable                   # plain float math of the variant
+    c_symbol: str                   # standalone kernel symbol (emit_c)
+    c_suffix: str = ""              # routing-kernel symbol suffix
+
+    @property
+    def plan_field(self) -> str:
+        return PLAN_FIELDS[self.kind]
+
+
+class VariantRegistry:
+    """(kind, name) -> OpVariant, with one default per kind.
+
+    The registry is the single authority on what variant names mean:
+    plans validate against it at construction, the backends and the
+    EdgeVM resolve implementations through it, and the CLIs list its
+    names in their --softmax/--squash choices.
+    """
+
+    def __init__(self):
+        self._variants: dict = {}
+        self._defaults: dict = {}
+
+    def register(self, v: OpVariant, *, default: bool = False) -> OpVariant:
+        if v.kind not in KINDS:
+            raise ValueError(f"unknown op kind {v.kind!r}; have {KINDS}")
+        key = (v.kind, v.name)
+        if key in self._variants:
+            raise ValueError(f"variant {v.kind}:{v.name} already registered")
+        self._variants[key] = v
+        if default:
+            self._defaults[v.kind] = v.name
+        return v
+
+    def get(self, kind: str, name: str) -> OpVariant:
+        try:
+            return self._variants[(kind, name)]
+        except KeyError:
+            raise ValueError(
+                f"unknown {kind} variant {name!r}; registered: "
+                f"{', '.join(self.names(kind)) or '(none)'}") from None
+
+    def names(self, kind: str) -> tuple:
+        return tuple(sorted(n for k, n in self._variants if k == kind))
+
+    def default(self, kind: str) -> str:
+        return self._defaults[kind]
+
+    def validate(self, kind: str, name: str) -> str:
+        """Raise (listing registered names) unless `name` is registered."""
+        self.get(kind, name)
+        return name
+
+    def from_attrs(self, kind: str, attrs: dict) -> OpVariant:
+        """Resolve an EdgeOp attr dict's variant reference (the kind's
+        plan-field key), defaulting for pre-variant artifacts — THE
+        accessor every edge consumer (VM, importer, C emitter) shares,
+        so the defaulting rule lives in exactly one place."""
+        return self.get(kind, attrs.get(PLAN_FIELDS[kind],
+                                        self.default(kind)))
+
+
+REGISTRY = VariantRegistry()
+
+REGISTRY.register(OpVariant(
+    name="q7", kind="softmax",
+    description="arm_softmax-style shift softmax (paper baseline): "
+                "powers of two of floor(x - max), integer-divided by "
+                "their sum",
+    q7=_q7_softmax, np_q7=_np_softmax_q7, fq=_fq_softmax_q7,
+    f32=_f32_softmax, c_symbol="arm_softmax_q7"), default=True)
+REGISTRY.register(OpVariant(
+    name="precise", kind="softmax",
+    description="dequantize -> fp32 softmax -> requant Q0.7 "
+                "(beyond-paper accuracy reference)",
+    q7=_q7_softmax_precise, np_q7=_np_softmax_q7_precise,
+    fq=_fq_softmax_precise, f32=_f32_softmax,
+    c_symbol="capsnet_softmax_q7_precise", c_suffix="_softmax_precise"))
+REGISTRY.register(OpVariant(
+    name="approx", kind="softmax",
+    description="ISLPED'22 approximate softmax: shift-based exp with "
+                "power-of-two normalization — no integer division",
+    q7=_q7_softmax_approx, np_q7=_np_softmax_q7_approx,
+    fq=_fq_softmax_approx, f32=_f32_softmax_approx,
+    c_symbol="capsnet_softmax_q7_approx", c_suffix="_softmax_approx"))
+
+REGISTRY.register(OpVariant(
+    name="exact", kind="squash",
+    description="Eq. 8 squash with Alg. 4 Newton-Raphson integer sqrt "
+                "(paper baseline)",
+    q7=_q7_squash, np_q7=_np_squash_q7, fq=_fq_squash,
+    f32=_f32_squash, c_symbol="capsnet_squash_q7"), default=True)
+REGISTRY.register(OpVariant(
+    name="approx", kind="squash",
+    description="ISLPED'22 approximate squash: L-inf norm instead of "
+                "the L2 norm — no square root",
+    q7=_q7_squash_approx, np_q7=_np_squash_q7_approx,
+    fq=_fq_squash_approx, f32=_f32_squash_approx,
+    c_symbol="capsnet_squash_q7_approx", c_suffix="_squash_approx"))
+
+DEFAULT_SOFTMAX = REGISTRY.default("softmax")
+DEFAULT_SQUASH = REGISTRY.default("squash")
+
+
+# ---------------------------------------------------------------------------
+# VariantSet — the pipeline-level selection, attached to PipelinePlan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class VariantSet:
+    """One softmax + one squash choice for a whole pipeline; validated
+    against the registry at construction and applied/read as plan
+    edits (never a method patch)."""
+    softmax: str = DEFAULT_SOFTMAX
+    squash: str = DEFAULT_SQUASH
+
+    def __post_init__(self):
+        REGISTRY.validate("softmax", self.softmax)
+        REGISTRY.validate("squash", self.squash)
+
+    @property
+    def tag(self) -> str:
+        return f"{self.softmax}+{self.squash}"
+
+    def is_default(self) -> bool:
+        return self.softmax == DEFAULT_SOFTMAX \
+            and self.squash == DEFAULT_SQUASH
+
+    @classmethod
+    def of_plan(cls, plan) -> "VariantSet":
+        """Read the selection off a PipelinePlan's layer plans (they must
+        agree — apply() is the only writer and keeps them uniform)."""
+        sms, sqs = set(), set()
+        for p in plan.layers.values():
+            if hasattr(p, "softmax_impl"):
+                sms.add(p.softmax_impl)
+            if hasattr(p, "squash_impl"):
+                sqs.add(p.squash_impl)
+        if len(sms) > 1 or len(sqs) > 1:
+            raise ValueError(
+                f"plan mixes operator variants: softmax={sorted(sms)} "
+                f"squash={sorted(sqs)}")
+        return cls(softmax=sms.pop() if sms else DEFAULT_SOFTMAX,
+                   squash=sqs.pop() if sqs else DEFAULT_SQUASH)
+
+    def apply(self, plan):
+        """Return a PipelinePlan with every variant-bearing layer plan
+        switched to this selection (untouched plans keep identity, so a
+        no-op apply is free and `is`-stable)."""
+        layers = {}
+        for name, p in plan.layers.items():
+            kw = {}
+            if hasattr(p, "softmax_impl") and p.softmax_impl != self.softmax:
+                kw["softmax_impl"] = self.softmax
+            if hasattr(p, "squash_impl") and p.squash_impl != self.squash:
+                kw["squash_impl"] = self.squash
+            layers[name] = dataclasses.replace(p, **kw) if kw else p
+        return dataclasses.replace(plan, layers=layers)
+
+    def to_json(self) -> dict:
+        return {"softmax": self.softmax, "squash": self.squash}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "VariantSet":
+        return cls(softmax=d.get("softmax", DEFAULT_SOFTMAX),
+                   squash=d.get("squash", DEFAULT_SQUASH))
+
+
+def all_variant_sets() -> tuple:
+    """Every (softmax, squash) combination currently registered — the
+    sweep the benchmark and the bit-parity tests iterate."""
+    return tuple(VariantSet(softmax=sm, squash=sq)
+                 for sm in REGISTRY.names("softmax")
+                 for sq in REGISTRY.names("squash"))

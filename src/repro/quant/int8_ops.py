@@ -203,3 +203,55 @@ def softmax_q7_precise(x, in_frac: int):
     xf = x.astype(jnp.float32) * (2.0 ** -in_frac)
     p = jax.nn.softmax(xf, axis=-1)
     return jnp.clip(jnp.round(p * 128.0), 0, INT8_MAX).astype(jnp.int8)
+
+
+def ceil_log2_int(tot):
+    """ceil(log2(tot)) for positive int32 arrays: the bit length of
+    tot - 1, counted with shifts so the semantics are integer-exact (and
+    identical to the NumPy mirror in repro.nn.variants)."""
+    t1 = tot.astype(jnp.int32) - 1
+    k = jnp.zeros_like(t1)
+    for j in range(31):
+        k = k + (jnp.right_shift(t1, j) > 0)
+    return k
+
+
+def softmax_q7_approx(x, in_frac: int):
+    """ISLPED'22 approximate softmax: shift-based exp with power-of-two
+    normalization -> Q0.7 output.
+
+    Probabilities are the same powers of two of floor(x - max) as
+    `softmax_q7`, but the normalizer sum is rounded UP to a power of two
+    (2^ceil(log2(sum))), so the per-element integer division becomes one
+    arithmetic right shift — the cheapest softmax an MCU can run."""
+    x32 = x.astype(jnp.int32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    e = jnp.maximum(jnp.right_shift(x32 - m, in_frac), -20)
+    p = jnp.left_shift(jnp.ones_like(e), 20 + e)
+    tot = jnp.sum(p, axis=-1, keepdims=True)
+    k = ceil_log2_int(tot)          # >= 20: the max element contributes 2^20
+    c = jnp.right_shift(p, k - 7)
+    return jnp.clip(c, 0, INT8_MAX).astype(jnp.int8)
+
+
+def squash_q7_approx(s, in_frac: int, out_frac: int = 7):
+    """ISLPED'22 approximate squash: Eq. 8 with the L2 norm replaced by
+    the L-inf norm M = max|s_i| — the 32-iteration Newton-Raphson
+    integer sqrt (Alg. 4, the routing loop's hot spot) disappears:
+
+        ratio = (M << (o - i + P)) // ((1 << i) + (M*M >> i))
+        v     = sat8((ratio * s) >> P)
+
+    M <= ||s||_2 <= sqrt(D) * M, so capsule probabilities keep their
+    ordering; the factor error is bounded by the capsule dimension."""
+    s32 = s.astype(jnp.int32)
+    M = jnp.max(jnp.abs(s32), axis=-1, keepdims=True)
+    Q = M * M
+    P = SQUASH_GUARD_BITS
+    shift = out_frac - in_frac + P
+    num = jnp.left_shift(M, max(shift, 0)) if shift >= 0 \
+        else jnp.right_shift(M, -shift)
+    den = (1 << in_frac) + jnp.right_shift(Q, in_frac)
+    ratio = num // jnp.maximum(den, 1)
+    v = jnp.right_shift(ratio * s32, P)
+    return jnp.clip(v, INT8_MIN, INT8_MAX).astype(jnp.int8)

@@ -56,9 +56,12 @@ def quantize_capsnet(params, cfg, calib_images, *,
             "per_channel=True) for the typed ConvPlan.w_frac_per_channel "
             "path")
     qnet = quantize_pipeline(params, cfg, calib_images, rounding=rounding)
+    # the legacy container's softmax reference comes off the typed plan
+    # (registry-validated), never from a literal repeated here
     return QCapsNet(cfg=cfg, weights=qnet.qweights,
                     shifts=compat.plan_to_shifts(qnet.plan),
-                    rounding=rounding)
+                    rounding=rounding,
+                    softmax_impl=qnet.plan.variants.softmax)
 
 
 def quantize_pipeline(params, cfg, calib_images, *,

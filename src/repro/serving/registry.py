@@ -18,6 +18,7 @@ observable — tests pin reuse instead of trusting it.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,7 @@ from repro.data.synthetic import make_image_dataset
 from repro.nn.config import (CAPSNET_CONFIGS, CIFAR10, MNIST, SMALLNORB,
                              CapsNetConfig)
 from repro.nn.pipeline import CapsPipeline, QuantCapsNet
+from repro.nn.variants import DEFAULT_SOFTMAX, DEFAULT_SQUASH, VariantSet
 from repro.serving import sharded
 
 
@@ -51,8 +53,15 @@ class ModelSpec:
     dataset: str = "mnist"           # calibration kind, or "uniform"
     calib_n: int = 32
     seed: int = 0
-    softmax_impl: str = "q7"
+    softmax_impl: str = DEFAULT_SOFTMAX   # operator-variant references
+    squash_impl: str = DEFAULT_SQUASH     # (repro.nn.variants registry)
     per_channel: bool = False        # per-output-channel conv PTQ
+
+    @property
+    def variants(self) -> VariantSet:
+        """The spec's operator-variant selection (registry-validated)."""
+        return VariantSet(softmax=self.softmax_impl,
+                          squash=self.squash_impl)
 
     def images(self, n: int, seed: int) -> np.ndarray:
         """n request/calibration images matching the config's geometry
@@ -65,7 +74,7 @@ class ModelSpec:
 
     def build(self) -> QuantCapsNet:
         pipe = CapsPipeline.from_config(self.config,
-                                        softmax_impl=self.softmax_impl,
+                                        variants=self.variants,
                                         per_channel=self.per_channel)
         params = pipe.init(jax.random.key(self.seed))
         calib = jnp.asarray(self.images(self.calib_n, self.seed + 1))
@@ -96,12 +105,25 @@ class ModelRegistry:
         self.quantize_count = 0
         self.compile_count = 0
         self.exec_hits = 0
+        # model_id -> variant tag for models whose pallas backend falls
+        # back to the jnp oracle on non-default operator variants (the
+        # engine-side view of PallasBackend.fallbacks; warned once each)
+        self.variant_fallbacks: dict = {}
+        self._warned_fallbacks: set = set()
 
     # ------------------------------------------------------------------
     # models
     # ------------------------------------------------------------------
     def register(self, spec: ModelSpec) -> None:
+        """(Re-)register a spec under its id.  Drops any lazily-built
+        model and wave executables cached for that id — a re-register
+        with, say, a different operator variant must never keep serving
+        the previously built model from the cache."""
         self.specs[spec.model_id] = spec
+        self._models.pop(spec.model_id, None)
+        self.variant_fallbacks.pop(spec.model_id, None)
+        for key in [k for k in self._execs if k[0] == spec.model_id]:
+            del self._execs[key]
 
     def install(self, model_id: str, qnet: QuantCapsNet) -> None:
         """Serve an already-built model (trained weights, custom plan)
@@ -111,6 +133,26 @@ class ModelRegistry:
         self._models[model_id] = qnet
         for key in [k for k in self._execs if k[0] == model_id]:
             del self._execs[key]
+        self._note_variant_fallback(model_id, qnet)
+
+    def _note_variant_fallback(self, model_id: str,
+                               qnet: QuantCapsNet) -> None:
+        """Non-default operator variants on the pallas backend run the
+        jnp oracle loop (bit-identical, slower).  Make that observable
+        per model — a counter entry plus one warning per (model,
+        variant) — instead of a silent degradation."""
+        vs = qnet.variants
+        if qnet.backend != "pallas" or vs.is_default():
+            self.variant_fallbacks.pop(model_id, None)   # no longer stale
+            return
+        self.variant_fallbacks[model_id] = vs.tag
+        if (model_id, vs.tag) not in self._warned_fallbacks:
+            self._warned_fallbacks.add((model_id, vs.tag))
+            warnings.warn(
+                f"model {model_id!r}: pallas backend falls back to the "
+                f"jnp oracle for operator variants {vs.tag!r} (no fused "
+                "kernel; bit-identical, slower)", RuntimeWarning,
+                stacklevel=3)
 
     def install_artifact(self, capsbin_path, *,
                          model_id: str | None = None) -> QuantCapsNet:
@@ -138,6 +180,7 @@ class ModelRegistry:
                     f"unknown model {model_id!r}; have {self.model_ids()}")
             self._models[model_id] = spec.build()
             self.quantize_count += 1
+            self._note_variant_fallback(model_id, self._models[model_id])
         return self._models[model_id]
 
     def input_shape(self, model_id: str) -> tuple:

@@ -1,0 +1,85 @@
+#include "golden_caps_approx.h"
+
+const q7_t conv0_b[4] = {
+    -90, -53, -16, 21
+};
+
+const q7_t conv0_w[36] = {
+    -90, -53, -16, 21, 58, -86, -49, -12, 25, 62, -82, -45,
+    -8, 29, 66, -78, -41, -4, 33, 70, -74, -37, 0, 37,
+    74, -70, -33, 4, 41, 78, -66, -29, 8, 45, 82, -62
+};
+
+const int8_t conv0_out_shift_per_ch[4] = {
+    9, 10, 9, 9
+};
+
+const int8_t conv0_bias_shift_per_ch[4] = {
+    6, 7, 6, 6
+};
+
+const q7_t pcap_b[4] = {
+    -90, -53, -16, 21
+};
+
+const q7_t pcap_w[144] = {
+    -90, -53, -16, 21, 58, -86, -49, -12, 25, 62, -82, -45,
+    -8, 29, 66, -78, -41, -4, 33, 70, -74, -37, 0, 37,
+    74, -70, -33, 4, 41, 78, -66, -29, 8, 45, 82, -62,
+    -25, 12, 49, 86, -58, -21, 16, 53, 90, -54, -17, 20,
+    57, -87, -50, -13, 24, 61, -83, -46, -9, 28, 65, -79,
+    -42, -5, 32, 69, -75, -38, -1, 36, 73, -71, -34, 3,
+    40, 77, -67, -30, 7, 44, 81, -63, -26, 11, 48, 85,
+    -59, -22, 15, 52, 89, -55, -18, 19, 56, -88, -51, -14,
+    23, 60, -84, -47, -10, 27, 64, -80, -43, -6, 31, 68,
+    -76, -39, -2, 35, 72, -72, -35, 2, 39, 76, -68, -31,
+    6, 43, 80, -64, -27, 10, 47, 84, -60, -23, 14, 51,
+    88, -56, -19, 18, 55, -89, -52, -15, 22, 59, -85, -48
+};
+
+const q7_t caps_W[64] = {
+    -90, -53, -16, 21, 58, -86, -49, -12, 25, 62, -82, -45,
+    -8, 29, 66, -78, -41, -4, 33, 70, -74, -37, 0, 37,
+    74, -70, -33, 4, 41, 78, -66, -29, 8, 45, 82, -62,
+    -25, 12, 49, 86, -58, -21, 16, 53, 90, -54, -17, 20,
+    57, -87, -50, -13, 24, 61, -83, -46, -9, 28, 65, -79,
+    -42, -5, 32, 69
+};
+
+const int8_t caps_caps_out_shifts[2] = {
+    5, 5
+};
+
+const int8_t caps_caps_out_fracs[2] = {
+    9, 9
+};
+
+const int8_t caps_agree_shifts[1] = {
+    7
+};
+
+static q7_t arena[GOLDEN_CAPS_APPROX_ARENA_BYTES];
+static q15_t scratch[(GOLDEN_CAPS_APPROX_SCRATCH_BYTES + 1) / 2];
+
+void golden_caps_approx_run(const q7_t *input, q7_t *output)
+{
+    /* conv0: CONV_Q7 -> 6x6x4 q5 */
+    capsnet_convolve_HWC_q7_per_channel(input, 8, 1, conv0_w, 4,
+        3, 0, 1, conv0_b, conv0_bias_shift_per_ch,
+        conv0_out_shift_per_ch, arena, 6, scratch, NULL);
+    arm_relu_q7(arena, 144);
+    /* pcap: PRIMARY_CAPS_Q7 -> 8x2 q7 */
+    arm_convolve_HWC_q7_basic(arena, 6, 4, pcap_w, 4,
+        3, 0, 2, pcap_b, PCAP_BIAS_SHIFT,
+        PCAP_OUT_SHIFT, arena + 144, 2, scratch, NULL);
+    capsnet_squash_q7_approx(arena + 144, 8, 2, PCAP_SQUASH_IN_FRAC, PCAP_SQUASH_OUT_FRAC);
+    /* caps: CAPS_ROUTING_Q7 -> 2x2 q7 */
+    capsnet_dynamic_routing_q7_softmax_approx_squash_approx(arena + 144, caps_W, 2,
+        8, 2, 2, 2,
+        CAPS_UHAT_SHIFT, CAPS_LOGIT_FRAC, caps_caps_out_shifts,
+        caps_caps_out_fracs, caps_agree_shifts, CAPS_SQUASH_OUT_FRAC,
+        arena, (q7_t *)scratch);
+    for (int i = 0; i < GOLDEN_CAPS_APPROX_OUTPUT_BYTES; i++)
+        output[i] = (arena)[i];
+}
+

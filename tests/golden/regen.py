@@ -11,18 +11,20 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-from test_edge import golden_program  # noqa: E402
+from test_edge import golden_program, golden_program_approx  # noqa: E402
 
 from repro.edge import emit_c  # noqa: E402
 
 
 def main():
     out = pathlib.Path(__file__).parent
-    src = emit_c(golden_program())
-    for ext in ("c", "h"):
-        path = out / f"golden_caps.{ext}"
-        path.write_text(src[ext] + "\n")
-        print(f"wrote {path}")
+    for make in (golden_program, golden_program_approx):
+        program = make()
+        src = emit_c(program)
+        for ext in ("c", "h"):
+            path = out / f"{program.name}.{ext}"
+            path.write_text(src[ext] + "\n")
+            print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -222,14 +222,49 @@ def golden_program() -> EdgeProgram:
                        ops=(conv, pcap, caps))
 
 
-def test_emit_c_matches_golden():
-    src = emit_c(golden_program())
+def golden_program_approx() -> EdgeProgram:
+    """The golden program with the ISLPED'22 approximate softmax/squash
+    variant references — pins the variant-specific C emission (kernel
+    symbols + extra prototypes) the same way golden_caps pins the
+    default one."""
+    import dataclasses
+
+    base = golden_program()
+    ops = []
+    for op in base.ops:
+        attrs = dict(op.attrs)
+        if op.kind == "PRIMARY_CAPS_Q7":
+            attrs["squash_impl"] = "approx"
+        elif op.kind == "CAPS_ROUTING_Q7":
+            attrs["softmax_impl"] = "approx"
+            attrs["squash_impl"] = "approx"
+        ops.append(dataclasses.replace(op, attrs=attrs))
+    return dataclasses.replace(base, name="golden_caps_approx",
+                               ops=tuple(ops))
+
+
+@pytest.mark.parametrize("make", [golden_program, golden_program_approx])
+def test_emit_c_matches_golden(make):
+    program = make()
+    src = emit_c(program)
     for ext in ("c", "h"):
-        golden = (GOLDEN_DIR / f"golden_caps.{ext}").read_text()
+        golden = (GOLDEN_DIR / f"{program.name}.{ext}").read_text()
         assert src[ext] + "\n" == golden, \
-            (f"emitted .{ext} drifted from tests/golden/golden_caps.{ext}; "
-             "if the change is intentional, regenerate with "
+            (f"emitted .{ext} drifted from tests/golden/{program.name}."
+             f"{ext}; if the change is intentional, regenerate with "
              "tests/golden/regen.py")
+
+
+def test_emit_c_approx_symbols():
+    """Non-default variants change the emitted kernel symbols and add
+    their prototypes; the default emission carries neither."""
+    approx = emit_c(golden_program_approx())
+    assert "capsnet_squash_q7_approx(" in approx["c"]
+    assert ("capsnet_dynamic_routing_q7_softmax_approx_squash_approx("
+            in approx["c"])
+    base = emit_c(golden_program())
+    assert "approx" not in base["c"] and "approx" not in base["h"]
+    assert "ISLPED" in approx["h"]
 
 
 def test_golden_program_runs_in_vm():
