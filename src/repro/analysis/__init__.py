@@ -1,0 +1,33 @@
+"""Static verification for the edge stack (see README.md here).
+
+    from repro.analysis import check_program
+    check_program(lower(qnet)).raise_if_failed()
+
+Submodules: `ranges` (interval/overflow proofs), `plancheck` (Qm.n
+shift algebra), `arenacheck` (arena aliasing), `repolint` (repo-rule
+AST lint), `checker` (the one-call program verifier).  The public
+names below resolve lazily so `python -m repro.analysis.repolint`
+and `from repro.analysis import Diagnostic` never drag in the
+jax-backed model stack.
+"""
+from repro.analysis.diagnostics import (CheckError,  # noqa: F401
+                                        CheckResult, Diagnostic)
+
+_LAZY = {
+    "check_program": "repro.analysis.checker",
+    "check_structure": "repro.analysis.checker",
+    "check_ranges": "repro.analysis.ranges",
+    "annotate_acc_bounds": "repro.analysis.ranges",
+    "check_pipeline_plan": "repro.analysis.plancheck",
+    "check_arena": "repro.analysis.arenacheck",
+    "lint_paths": "repro.analysis.repolint",
+}
+
+__all__ = ["CheckError", "CheckResult", "Diagnostic", *_LAZY]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,33 @@
+"""Statically verify exported `.capsbin` artifacts:
+
+    PYTHONPATH=src python -m repro.analysis out/edge_tiny.capsbin [...]
+
+Loads each artifact, runs the full checker (structure, plan algebra,
+int32 range proofs, arena aliasing) and prints one result block per
+file.  Exit 1 on any finding — CI points this at everything
+`export_caps` produced.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: python -m repro.analysis <artifact.capsbin> [...]",
+              file=sys.stderr)
+        return 2
+    from repro.analysis.checker import check_program
+    from repro.edge.program import EdgeProgram
+
+    failed = False
+    for path in argv:
+        result = check_program(EdgeProgram.load(path))
+        print(result.format())
+        failed = failed or not result.ok
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -95,6 +95,8 @@ def plan_arena(program: EdgeProgram) -> ArenaPlan:
         [(tid, sizes[tid], life[tid]) for tid in arena_tids])
     peak = max(offsets[tid] + sizes[tid] for tid in offsets)
     scratch = max(op_scratch_bytes(op) for op in program.ops)
+    scratch += scratch % 2          # q15 scratch region: keep 2-byte
+    #                                 aligned (emit_c declares q15_t[])
     return ArenaPlan(offsets=offsets, lifetimes=life, arena_bytes=peak,
                      scratch_bytes=scratch,
                      naive_bytes=sum(sizes[t] for t in arena_tids))

@@ -18,7 +18,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.edge.arena import ArenaPlan, op_scratch_bytes, plan_arena
+from repro.edge.arena import ArenaPlan, plan_arena
 from repro.edge.program import EdgeOp, EdgeProgram
 from repro.nn.variants import REGISTRY as _VARIANTS
 
@@ -201,7 +201,7 @@ def emit_c(program: EdgeProgram, plan: ArenaPlan | None = None) -> dict:
     plan = plan or plan_arena(program)
     stem = program.name
     guard = f"CAPSNET_{stem.upper()}_H"
-    scratch = max(op_scratch_bytes(op) for op in program.ops)
+    scratch = plan.scratch_bytes    # 2-byte aligned by plan_arena
 
     # ---------------- header ----------------
     h = [f"/* Auto-generated by repro.edge.emit_c from EdgeProgram "

@@ -23,8 +23,14 @@ from repro.edge.vm import EdgeVM
 
 
 def export_artifacts(qnet, out_dir, stem: str | None = None, *,
-                     verify_images=None) -> dict:
-    """Lower, plan, serialize, emit C, and (optionally) verify.
+                     verify_images=None, check: bool = True) -> dict:
+    """Lower, plan, statically check, serialize, emit C, and
+    (optionally) verify.
+
+    check (default on): run the full static verifier
+    (repro.analysis.check_program — int32 range proofs, plan shift
+    algebra, arena aliasing) on the lowered program BEFORE anything is
+    written; findings raise a CheckError listing every diagnostic.
 
     verify_images: float images [N,H,W,C] in [0,1]; when given, the
     `.capsbin` is reloaded from disk and executed in the EdgeVM, and a
@@ -35,6 +41,10 @@ def export_artifacts(qnet, out_dir, stem: str | None = None, *,
     program = lower(qnet, name=stem)
     stem = program.name
     plan = plan_arena(program)
+
+    if check:
+        from repro.analysis import check_program
+        check_program(program, arena=plan).raise_if_failed()
 
     paths = program.save(out_dir / stem)
     paths.update(save_c(program, out_dir, plan))
@@ -57,13 +67,16 @@ def export_artifacts(qnet, out_dir, stem: str | None = None, *,
         verified = int(len(x_q))
 
     return {"paths": paths, "report": report, "program": program,
-            "arena": plan, "verified": verified}
+            "arena": plan, "verified": verified, "checked": check}
 
 
 def format_export(result: dict) -> str:
     lines = [format_report(result["report"])]
     lines.append("  artifacts: "
                  + ", ".join(str(p) for p in result["paths"].values()))
+    if result.get("checked"):
+        lines.append("  static checks clean (repro.analysis: ranges, "
+                     "plan, arena)")
     if result["verified"]:
         lines.append(f"  VM re-verified bit-exact on "
                      f"{result['verified']} images (reloaded from disk)")

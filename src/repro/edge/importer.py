@@ -71,8 +71,16 @@ def program_config(program: EdgeProgram) -> CapsNetConfig:
     return cfg
 
 
-def to_qnet(program: EdgeProgram) -> QuantCapsNet:
-    """EdgeProgram -> QuantCapsNet executing bit-identically to the VM."""
+def to_qnet(program: EdgeProgram, *, check: bool = True) -> QuantCapsNet:
+    """EdgeProgram -> QuantCapsNet executing bit-identically to the VM.
+
+    check (default on): run the static verifier first
+    (repro.analysis.check_program), so a tampered or miscompiled
+    artifact is rejected with op/tensor-precise diagnostics
+    (CheckError, a ValueError) instead of being served."""
+    if check:
+        from repro.analysis import check_program
+        check_program(program).raise_if_failed()
     cfg = program_config(program)
     routing = next(op for op in program.ops
                    if op.kind == "CAPS_ROUTING_Q7")
@@ -113,6 +121,7 @@ def to_qnet(program: EdgeProgram) -> QuantCapsNet:
                         rounding=program.rounding, backend="jnp")
 
 
-def load_qnet(path) -> QuantCapsNet:
-    """One-call `.capsbin` file -> servable model."""
-    return to_qnet(EdgeProgram.load(path))
+def load_qnet(path, *, check: bool = True) -> QuantCapsNet:
+    """One-call `.capsbin` file -> servable model (statically checked
+    unless check=False)."""
+    return to_qnet(EdgeProgram.load(path), check=check)

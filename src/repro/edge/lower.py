@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.analysis.ranges import annotate_acc_bounds
 from repro.edge.program import EdgeOp, EdgeProgram, TensorSpec
 from repro.nn.layers import CapsuleRouting, PrimaryCaps, QuantConv2D
 from repro.nn.pipeline import QuantCapsNet
@@ -104,9 +105,14 @@ def lower(qnet: QuantCapsNet, name: str | None = None) -> EdgeProgram:
                 "new CapsLayer kinds before exporting them")
         cur = out
 
-    return EdgeProgram(name=name, rounding=qnet.rounding,
-                       input_frac=qnet.plan.input_frac,
-                       tensors=tuple(tensors), ops=tuple(ops))
+    program = EdgeProgram(name=name, rounding=qnet.rounding,
+                          input_frac=qnet.plan.input_frac,
+                          tensors=tuple(tensors), ops=tuple(ops))
+    # every conv-accumulating op carries its statically-derived
+    # worst-case |int32 accumulator| (repro.analysis.ranges); the VM
+    # asserts it at run time, so the checker and the VM cannot
+    # silently disagree about wrap safety
+    return annotate_acc_bounds(program)
 
 
 def describe(program: EdgeProgram) -> str:

@@ -198,9 +198,24 @@ class EdgeProgram:
         for o in header["ops"]:
             weights = {}
             for wname, m in o["weights"].items():
+                # the header's blob metadata must be internally
+                # consistent with the payload BEFORE frombuffer touches
+                # it — a tampered shape/nbytes/offset is a loud
+                # malformed-artifact error, not a silent misread
+                count = int(np.prod(m["shape"], dtype=np.int64))
+                want = count * np.dtype(m["dtype"]).itemsize
+                if int(m["nbytes"]) != want:
+                    raise ValueError(
+                        f"{path}: blob {o['name']}/{wname} declares "
+                        f"{m['nbytes']} bytes but shape {m['shape']} x "
+                        f"{m['dtype']} needs {want}")
+                if m["offset"] < 0 or m["offset"] + want > len(payload):
+                    raise ValueError(
+                        f"{path}: blob {o['name']}/{wname} at offset "
+                        f"{m['offset']} (+{want}B) runs past the "
+                        f"{len(payload)}-byte payload")
                 a = np.frombuffer(payload, dtype=np.dtype(m["dtype"]),
-                                  count=int(np.prod(m["shape"], dtype=int)),
-                                  offset=m["offset"])
+                                  count=count, offset=m["offset"])
                 weights[wname] = a.reshape(m["shape"]).copy()
             ops.append(EdgeOp(o["kind"], o["name"], tuple(o["inputs"]),
                               o["output"], _attrs_from_json(o["attrs"]),

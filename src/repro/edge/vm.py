@@ -67,8 +67,9 @@ def _rshift_sat8_vec(acc, shifts, rounding: str):
 
 def _conv2d_acc(x, w, stride: int):
     """VALID NHWC int conv via im2col, int32 accumulation (wrap-on-
-    overflow, same as the XLA int32 conv — though no exported geometry
-    gets near 2^31)."""
+    overflow, same as the XLA int32 conv; `_assert_acc_bound` enforces
+    the statically-proven bound lower() records, so a geometry that
+    could wrap is rejected rather than silently wrong)."""
     kh, kw = w.shape[0], w.shape[1]
     win = np.lib.stride_tricks.sliding_window_view(x, (kh, kw), axis=(1, 2))
     win = win[:, ::stride, ::stride]            # [B,Ho,Wo,Cin,kh,kw]
@@ -91,16 +92,35 @@ def _run_conv(op: EdgeOp, x, rounding: str, relu_override=None):
         bs = np.asarray(a["bias_shift_per_channel"], np.int32)
         bias = np.left_shift(bias, np.maximum(bs, 0))
         bias = np.right_shift(bias, np.maximum(-bs, 0))
-        acc = acc + bias
-        y = _rshift_sat8_vec(acc, a["out_shift_per_channel"], rounding)
     else:
         bs = a["bias_shift"]
         bias = np.left_shift(bias, bs) if bs >= 0 \
             else np.right_shift(bias, -bs)
-        acc = acc + bias
+    acc = acc + bias
+    _assert_acc_bound(op, acc)
+    if a.get("out_shift_per_channel"):
+        y = _rshift_sat8_vec(acc, a["out_shift_per_channel"], rounding)
+    else:
         y = _rshift_sat8(acc, a["out_shift"], rounding)
     relu = a["relu"] if relu_override is None else relu_override
     return np.maximum(y, 0).astype(np.int8) if relu else y
+
+
+def _assert_acc_bound(op: EdgeOp, acc) -> None:
+    """`lower()` records the statically-derived worst-case |int32
+    accumulator| (repro.analysis.ranges) as an `acc_bound` attr; the VM
+    enforces it so a wrap the checker proved impossible can never
+    happen silently here either (pre-acc_bound artifacts skip it)."""
+    bound = op.attrs.get("acc_bound")
+    if bound is None or not acc.size:
+        return
+    peak = int(np.abs(acc.astype(np.int64)).max())
+    if peak > bound:
+        raise AssertionError(
+            f"{op.name}: |int32 accumulator| reached {peak}, above the "
+            f"statically derived acc_bound {bound} — the program's "
+            f"attrs disagree with its weights; rerun "
+            f"repro.analysis.check_program on this artifact")
 
 
 def _run_primary_caps(op: EdgeOp, x, rounding: str):

@@ -17,13 +17,16 @@ cifar10, edge_tiny -> the @jnp spec) or a full registry id.
 `--softmax`/`--squash` export with an operator variant from the
 registry (repro.nn.variants; unknown names fail with the registered
 ones listed) — the variant references ride the `.capsbin` attrs and
-pick the matching C kernel symbols.
+pick the matching C kernel symbols.  The static verifier
+(repro.analysis) vets the lowered program before anything is written;
+`--no-check` skips it.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from repro.analysis import CheckError
 from repro.edge import describe, format_export
 from repro.nn.variants import REGISTRY
 from repro.serving import ModelRegistry, default_specs
@@ -52,6 +55,11 @@ def main(argv=None) -> int:
     ap.add_argument("--verify-n", type=int, default=4,
                     help="images for the bit-exact VM re-verification "
                     "(0 disables)")
+    ap.add_argument("--check", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="statically verify the lowered program before "
+                    "writing artifacts (repro.analysis: int32 range "
+                    "proofs, plan shift algebra, arena aliasing)")
     args = ap.parse_args(argv)
 
     model_id = args.model if "@" in args.model else f"{args.model}@jnp"
@@ -77,7 +85,10 @@ def main(argv=None) -> int:
           f"-> {args.out}")
     try:
         result = registry.export(model_id, args.out, stem=args.stem,
-                                 verify_n=args.verify_n)
+                                 verify_n=args.verify_n, check=args.check)
+    except CheckError as e:          # static findings are exit 1 too
+        print(f"[export_caps] STATIC CHECK FAILED:\n{e}", file=sys.stderr)
+        return 1
     except AssertionError as e:      # verification failure is exit 1
         print(f"[export_caps] VERIFY FAILED: {e}", file=sys.stderr)
         return 1

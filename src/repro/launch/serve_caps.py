@@ -16,6 +16,9 @@ the `.capsbin` is imported back into a QuantCapsNet (repro.edge
 importer) and installed under its program name — the bits in flight are
 exactly the bits that shipped.
 
+Imported artifacts pass through the static verifier (repro.analysis)
+before they are served; --no-check skips it.
+
 --softmax/--squash select operator variants from the registry
 (repro.nn.variants; e.g. the ISLPED'22 approximate softmax/squash) —
 on a spec as a rebuilt ModelSpec, on a --capsbin artifact as a pure
@@ -26,10 +29,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
 
 import numpy as np
 
+from repro.analysis import CheckError
 from repro.launch.mesh import make_host_mesh
 from repro.nn.variants import REGISTRY, VariantSet
 from repro.serving import ModelRegistry, default_specs, serve_window
@@ -64,6 +69,10 @@ def main(argv=None):
                     help="also dump the served model as an MCU artifact "
                     "(.capsbin + manifest + .c/.h via repro.edge) and "
                     "print the flash/RAM report")
+    ap.add_argument("--check", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="statically verify imported --capsbin artifacts "
+                    "and --export programs (repro.analysis)")
     args = ap.parse_args(argv)
 
     # serving waves shard over BATCH=("pod","data"): give "data" the
@@ -75,7 +84,13 @@ def main(argv=None):
     buckets = tuple(int(b) for b in args.buckets.split(","))
 
     if args.capsbin:
-        qnet = registry.install_artifact(args.capsbin)
+        try:
+            qnet = registry.install_artifact(args.capsbin,
+                                             check=args.check)
+        except CheckError as e:      # refuse to serve a bad artifact
+            print(f"[serve_caps] STATIC CHECK FAILED for "
+                  f"{args.capsbin}:\n{e}", file=sys.stderr)
+            return 1
         model_id = qnet.pipeline.cfg.name        # the program's name
         if args.softmax or args.squash:          # plan edit on the artifact
             vs = dataclasses.replace(
@@ -118,7 +133,7 @@ def main(argv=None):
               "KB int8)")
     if args.export:
         from repro.edge import format_export
-        result = registry.export(model_id, args.export)
+        result = registry.export(model_id, args.export, check=args.check)
         print("[serve_caps] exported MCU artifact:")
         print(format_export(result))
 
@@ -137,4 +152,4 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -126,6 +126,13 @@ class PipelinePlan:
         + one squash reference; see repro.nn.variants.VariantSet)."""
         return _variants.VariantSet.of_plan(self)
 
+    def check(self) -> list:
+        """Lint this plan's shift/frac algebra, per-channel tables,
+        variant references and layer chaining (repro.analysis.plancheck)
+        — returns the diagnostics, empty when clean."""
+        from repro.analysis.plancheck import check_pipeline_plan
+        return check_pipeline_plan(self)
+
 
 _PLAN_KINDS = {}                      # class name -> plan dataclass
 

@@ -331,6 +331,11 @@ class VariantRegistry:
         self.get(kind, name)
         return name
 
+    def is_registered(self, kind: str, name: str) -> bool:
+        """Non-raising membership test (the static checker reports
+        unknown references as diagnostics instead of exceptions)."""
+        return (kind, name) in self._variants
+
     def from_attrs(self, kind: str, attrs: dict) -> OpVariant:
         """Resolve an EdgeOp attr dict's variant reference (the kind's
         plan-field key), defaulting for pre-variant artifacts — THE

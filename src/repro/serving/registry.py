@@ -154,14 +154,16 @@ class ModelRegistry:
                 "kernel; bit-identical, slower)", RuntimeWarning,
                 stacklevel=3)
 
-    def install_artifact(self, capsbin_path, *,
-                         model_id: str | None = None) -> QuantCapsNet:
+    def install_artifact(self, capsbin_path, *, model_id: str | None = None,
+                         check: bool = True) -> QuantCapsNet:
         """Serve exactly the artifact `export_caps` shipped: load the
         `.capsbin`, rebuild a QuantCapsNet from its ops (repro.edge
         importer — bit-identical to the EdgeVM), and install it under
-        `model_id` (default: the program's own name)."""
+        `model_id` (default: the program's own name).  The static
+        verifier vets the program first unless check=False (a tampered
+        artifact is rejected, not served)."""
         from repro.edge import load_qnet
-        qnet = load_qnet(capsbin_path)
+        qnet = load_qnet(capsbin_path, check=check)
         self.install(model_id or qnet.pipeline.cfg.name, qnet)
         return qnet
 
@@ -194,11 +196,13 @@ class ModelRegistry:
     # compiled wave executables
     # ------------------------------------------------------------------
     def export(self, model_id: str, out_dir, *, stem: str | None = None,
-               verify_n: int = 4) -> dict:
+               verify_n: int = 4, check: bool = True) -> dict:
         """Dump a served model as an MCU artifact (repro.edge): lower the
-        QuantCapsNet to an EdgeProgram, write `.capsbin` + manifest +
-        CMSIS-NN-style `.c/.h`, and re-verify the reloaded binary in the
-        NumPy VM against the live model on `verify_n` images."""
+        QuantCapsNet to an EdgeProgram, statically check it
+        (repro.analysis, unless check=False), write `.capsbin` +
+        manifest + CMSIS-NN-style `.c/.h`, and re-verify the reloaded
+        binary in the NumPy VM against the live model on `verify_n`
+        images."""
         from repro.edge import export_artifacts
         qnet = self.model(model_id)
         images = None
@@ -212,7 +216,7 @@ class ModelRegistry:
                 images = rng.uniform(0, 1, shape).astype(np.float32)
         stem = stem or model_id.replace("@", "_")
         return export_artifacts(qnet, out_dir, stem=stem,
-                                verify_images=images)
+                                verify_images=images, check=check)
 
     def executable(self, model_id: str, bucket: int) -> sharded.CompiledWave:
         key = (model_id, bucket)

@@ -5,6 +5,12 @@ change:
 
 then review the diff of tests/golden/golden_caps.{c,h} like any other
 code change — the golden test exists to make emitter drift visible.
+
+    PYTHONPATH=src python tests/golden/regen.py --check
+
+compares instead of writing and exits 1 on any drift (the CI gate: a
+PR that changes the emitter must also regenerate and commit the
+goldens in the same diff).
 """
 import pathlib
 import sys
@@ -16,16 +22,33 @@ from test_edge import golden_program, golden_program_approx  # noqa: E402
 from repro.edge import emit_c  # noqa: E402
 
 
-def main():
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    check = "--check" in argv
     out = pathlib.Path(__file__).parent
+    drifted = []
     for make in (golden_program, golden_program_approx):
         program = make()
         src = emit_c(program)
         for ext in ("c", "h"):
             path = out / f"{program.name}.{ext}"
-            path.write_text(src[ext] + "\n")
-            print(f"wrote {path}")
+            want = src[ext] + "\n"
+            if not check:
+                path.write_text(want)
+                print(f"wrote {path}")
+            elif not path.exists() or path.read_text() != want:
+                drifted.append(path)
+                print(f"DRIFT: {path} no longer matches the emitter "
+                      f"output", file=sys.stderr)
+            else:
+                print(f"ok: {path}")
+    if drifted:
+        print(f"[regen] {len(drifted)} golden file(s) drifted — run "
+              f"`python tests/golden/regen.py` and commit the diff",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,0 +1,458 @@
+"""Tests for the static verifier (repro.analysis).
+
+Two halves, mirroring the subsystem's contract:
+
+  * zero false positives — every shipped config x rounding x operator
+    variant combo (and the per-channel plan) lowers to a program the
+    checker passes clean, and the typed plans lint clean;
+  * every seeded defect class is caught — a mutation corpus covering
+    shift algebra, format threading, per-channel tables, variant
+    references, arena aliasing, scratch sizing, and int32 accumulator
+    overflow, each asserting the diagnostic names the right op/tensor.
+
+Plus the wiring: `lower()` stamps `acc_bound` attrs the VM asserts,
+imported `.capsbin` artifacts pass through the checker (tampered ones
+are rejected as ValueError), `export_artifacts` refuses to write a
+failing program, and the repo lint rules fire where they should.
+"""
+import dataclasses
+import itertools
+import json
+import pathlib
+import struct
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CheckError, annotate_acc_bounds, check_arena,
+                            check_pipeline_plan, check_program)
+from repro.analysis.ranges import analyze
+from repro.analysis.repolint import lint_paths, lint_source
+from repro.edge import EdgeOp, EdgeProgram, EdgeVM, TensorSpec, \
+    export_artifacts, load_qnet, lower, plan_arena
+from repro.nn.plans import ConvPlan
+from repro.nn.variants import REGISTRY, VariantSet
+from test_edge import CONFIGS, built
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def checks_of(result):
+    return [d.check for d in result.diagnostics]
+
+
+def tamper_attrs(program, op_idx, **attrs):
+    """A copy of `program` with op `op_idx`'s attrs overridden."""
+    ops = list(program.ops)
+    ops[op_idx] = dataclasses.replace(
+        ops[op_idx], attrs={**ops[op_idx].attrs, **attrs})
+    return dataclasses.replace(program, ops=tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# zero false positives on everything we ship
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rounding", ["floor", "nearest"])
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_checker_clean_on_all_configs(name, rounding):
+    qnet, _ = built(name, rounding)
+    result = check_program(lower(qnet))
+    assert result.ok, result.format()
+
+
+@pytest.mark.parametrize("softmax,squash", sorted(itertools.product(
+    REGISTRY.names("softmax"), REGISTRY.names("squash"))))
+def test_checker_clean_on_all_variant_combos(softmax, squash):
+    qnet, _ = built("capsnet_edge_tiny")
+    qnet = qnet.with_variants(VariantSet(softmax=softmax, squash=squash))
+    result = check_program(lower(qnet))
+    assert result.ok, result.format()
+
+
+def test_checker_clean_on_per_channel_plan():
+    qnet, _ = built("capsnet_edge_tiny", "nearest", per_channel=True)
+    result = check_program(lower(qnet))
+    assert result.ok, result.format()
+
+
+def test_typed_plan_lints_clean():
+    qnet, _ = built("capsnet_edge_tiny")
+    assert qnet.plan.check() == []
+    assert check_pipeline_plan(qnet.plan) == []
+
+
+# ---------------------------------------------------------------------------
+# satellite: lower() stamps acc_bound attrs; the VM asserts them
+# ---------------------------------------------------------------------------
+def test_lower_records_acc_bounds_matching_analysis():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    bounds, diags = analyze(program)
+    assert diags == []
+    for i, op in enumerate(program.ops):
+        if op.kind in ("CONV_Q7", "PRIMARY_CAPS_Q7"):
+            assert op.attrs["acc_bound"] == bounds[i] > 0
+        else:
+            assert "acc_bound" not in op.attrs
+
+
+def test_vm_asserts_tampered_acc_bound():
+    qnet, x_q = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    EdgeVM(program).run(x_q)                       # clean bound: runs
+    bad = tamper_attrs(program, 0, acc_bound=7)
+    with pytest.raises(AssertionError, match="acc_bound"):
+        EdgeVM(bad).run(x_q)
+    # and the checker flags the same tamper statically
+    result = check_program(bad)
+    (d,) = result.by_check("ranges.acc-bound-mismatch")
+    assert d.op_index == 0 and d.op_name == program.ops[0].name
+
+
+def test_annotate_acc_bounds_is_idempotent():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    again = annotate_acc_bounds(program)
+    assert program.same_as(again)
+
+
+# ---------------------------------------------------------------------------
+# mutation corpus: every defect class -> a precise diagnostic
+# ---------------------------------------------------------------------------
+def test_mutation_shrunk_out_shift():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    bad = tamper_attrs(program, 0,
+                       out_shift=program.ops[0].attrs["out_shift"] - 1)
+    result = check_program(bad)
+    (d,) = result.by_check("plan.out-shift-mismatch")
+    assert d.op_index == 0 and d.op_name == program.ops[0].name
+
+
+def test_mutation_shift_out_of_domain():
+    qnet, _ = built("capsnet_edge_tiny")
+    bad = tamper_attrs(lower(qnet), 0, out_shift=45)
+    result = check_program(bad)
+    (d,) = result.by_check("ranges.shift-range")
+    assert d.op_index == 0 and ("shift", 45) in d.detail
+    assert result.by_check("plan.out-shift-mismatch")
+
+
+def test_mutation_swapped_fracs():
+    """Swapping in/out fracs breaks the tensor-format contract — the
+    structural stage names the mistyped tensor and short-circuits."""
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    a = program.ops[0].attrs
+    bad = tamper_attrs(program, 0, in_frac=a["out_frac"],
+                       out_frac=a["in_frac"])
+    result = check_program(bad)
+    (d,) = result.by_check("ir.frac-mismatch")
+    assert d.tensor == program.ops[0].output
+    assert all(c.startswith("ir.") for c in checks_of(result))
+
+
+def test_mutation_broken_frac_threading():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    bad = tamper_attrs(program, 0,
+                       in_frac=program.ops[0].attrs["in_frac"] + 1)
+    result = check_program(bad)
+    (d,) = result.by_check("plan.frac-thread-mismatch")
+    assert d.op_index == 0 and d.tensor == 0
+
+
+def test_mutation_truncated_per_channel_table():
+    qnet, _ = built("capsnet_edge_tiny", "nearest", per_channel=True)
+    program = lower(qnet)
+    table = program.ops[0].attrs["out_shift_per_channel"]
+    assert len(table) > 1
+    bad = tamper_attrs(program, 0, out_shift_per_channel=table[:-1])
+    result = check_program(bad)
+    (d,) = result.by_check("plan.per-channel-length")
+    assert d.op_index == 0 and d.op_name == program.ops[0].name
+
+
+def test_mutation_unregistered_variant():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    routing_idx = next(i for i, op in enumerate(program.ops)
+                       if op.kind == "CAPS_ROUTING_Q7")
+    bad = tamper_attrs(program, routing_idx, softmax_impl="turbo")
+    result = check_program(bad)
+    assert any(d.op_index == routing_idx and ("name", "turbo") in d.detail
+               for d in result.by_check("plan.unregistered-variant")), \
+        result.format()
+
+
+def test_mutation_overlapping_arena_offsets():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    plan = plan_arena(program)
+    bad = dataclasses.replace(
+        plan, offsets={**plan.offsets, 2: plan.offsets[1]})
+    result = check_program(program, arena=bad)
+    overlaps = result.by_check("arena.overlap")
+    assert overlaps, result.format()
+    assert any({d.tensor, dict(d.detail)["other"]} == {1, 2}
+               for d in overlaps)
+    assert check_arena(program, plan_arena(program)) == []
+
+
+def test_mutation_scratch_undersized_and_unaligned():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    plan = plan_arena(program)
+    assert plan.scratch_bytes % 2 == 0
+
+    (d,) = check_arena(program,
+                       dataclasses.replace(plan, scratch_bytes=0))
+    assert d.check == "arena.scratch-undersized"
+    assert d.op_name in {op.name for op in program.ops}
+
+    (d,) = check_arena(
+        program,
+        dataclasses.replace(plan, scratch_bytes=plan.scratch_bytes + 1))
+    assert d.check == "arena.scratch-unaligned"
+
+
+def _oversized_conv_program():
+    """A structurally/plan-wise valid conv whose worst-case int32
+    accumulator provably wraps: 3*3*16384 taps of |w|=127 against
+    |x|<=128 -> bound ~2.4e9 > 2^31-1."""
+    in_ch = 16384
+    attrs = {"kernel": 3, "stride": 1, "in_ch": in_ch, "out_ch": 1,
+             "relu": False, "in_frac": 7, "w_frac": 7, "b_frac": 14,
+             "out_frac": 7, "out_shift": 7, "bias_shift": 0}
+    op = EdgeOp("CONV_Q7", "conv_huge", (0,), 1, attrs, {
+        "w": np.full((3, 3, in_ch, 1), 127, np.int8),
+        "b": np.zeros((1,), np.int8)})
+    tensors = (TensorSpec(0, "input", (3, 3, in_ch), 7),
+               TensorSpec(1, "out", (1, 1, 1), 7))
+    return EdgeProgram(name="huge", rounding="floor", input_frac=7,
+                       tensors=tensors, ops=(op,))
+
+
+def test_mutation_oversized_conv_wraps_int32():
+    result = check_program(_oversized_conv_program())
+    (d,) = result.by_check("ranges.acc-overflow")
+    assert d.op_index == 0 and d.op_name == "conv_huge"
+    assert dict(d.detail)["bound"] > 2 ** 31 - 1
+    # the identical geometry with |w|=1 fits comfortably -> clean
+    ok = _oversized_conv_program()
+    op = dataclasses.replace(
+        ok.ops[0], weights={"w": np.ones((3, 3, 16384, 1), np.int8),
+                            "b": np.zeros((1,), np.int8)})
+    assert check_program(
+        dataclasses.replace(ok, ops=(op,))).ok
+
+
+def test_structure_catches_dataflow_breaks():
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    # dangling input reference
+    ops = list(program.ops)
+    ops[1] = dataclasses.replace(ops[1], inputs=(3,))
+    result = check_program(dataclasses.replace(program, ops=tuple(ops)))
+    assert result.by_check("ir.undefined-input")
+    # double write
+    ops = list(program.ops)
+    ops[1] = dataclasses.replace(ops[1], output=ops[0].output)
+    result = check_program(dataclasses.replace(program, ops=tuple(ops)))
+    assert result.by_check("ir.output-clobber")
+
+
+# ---------------------------------------------------------------------------
+# wiring: importer / export refuse bad artifacts
+# ---------------------------------------------------------------------------
+def test_importer_rejects_tampered_artifact(tmp_path):
+    qnet, _ = built("capsnet_edge_tiny")
+    program = lower(qnet)
+    bad = tamper_attrs(program, 0,
+                       out_shift=program.ops[0].attrs["out_shift"] - 1)
+    paths = bad.save(tmp_path / "bad")
+    with pytest.raises(CheckError, match="out-shift-mismatch"):
+        load_qnet(paths["capsbin"])
+    with pytest.raises(ValueError):                # importer-caller view
+        load_qnet(paths["capsbin"])
+    assert load_qnet(paths["capsbin"], check=False) is not None
+
+
+def _rewrite_header(capsbin, edit):
+    """Re-serialize a .capsbin with `edit(header_dict)` applied."""
+    raw = pathlib.Path(capsbin).read_bytes()
+    hstart = 8 + 4                                 # MAGIC + u32 length
+    (hlen,) = struct.unpack_from("<I", raw, 8)
+    header = json.loads(raw[hstart:hstart + hlen].decode())
+    payload = raw[(hstart + hlen + 15) // 16 * 16:]
+    edit(header)
+    hbytes = json.dumps(header, sort_keys=True).encode()
+    blob = raw[:8] + struct.pack("<I", len(hbytes)) + hbytes
+    blob += b"\x00" * (-len(blob) % 16) + payload
+    out = pathlib.Path(capsbin).with_suffix(".tampered.capsbin")
+    out.write_bytes(blob)
+    return out
+
+
+def test_load_rejects_inconsistent_blob_metadata(tmp_path):
+    qnet, _ = built("capsnet_edge_tiny")
+    paths = lower(qnet).save(tmp_path / "m")
+
+    def bad_nbytes(h):
+        h["ops"][0]["weights"]["w"]["nbytes"] += 1
+    with pytest.raises(ValueError, match="declares"):
+        EdgeProgram.load(_rewrite_header(paths["capsbin"], bad_nbytes))
+
+    def bad_offset(h):
+        h["ops"][0]["weights"]["w"]["offset"] = 1 << 30
+    with pytest.raises(ValueError, match="runs past"):
+        EdgeProgram.load(_rewrite_header(paths["capsbin"], bad_offset))
+
+
+def test_export_refuses_to_write_failing_program(tmp_path):
+    qnet, _ = built("capsnet_edge_tiny")
+    conv_name = next(n for n, p in qnet.plan.layers.items()
+                     if isinstance(p, ConvPlan))
+    bad_conv = dataclasses.replace(qnet.plan.layers[conv_name],
+                                   out_shift=qnet.plan.layers[conv_name]
+                                   .out_shift + 1)
+    bad_plan = dataclasses.replace(
+        qnet.plan, layers={**qnet.plan.layers, conv_name: bad_conv})
+    bad_qnet = dataclasses.replace(qnet, plan=bad_plan)
+    with pytest.raises(CheckError, match="out-shift-mismatch"):
+        export_artifacts(bad_qnet, tmp_path, stem="nope")
+    assert not list(tmp_path.iterdir()), "artifacts written despite findings"
+    # typed-plan lint sees the same defect, named by layer
+    diags = bad_plan.check()
+    assert any(d.check == "plan.out-shift-mismatch"
+               and d.op_name == conv_name for d in diags)
+
+
+def test_export_result_reports_checked():
+    qnet, x = built("capsnet_edge_tiny")
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        result = export_artifacts(qnet, d, stem="ok")
+        assert result["checked"] is True
+
+
+# ---------------------------------------------------------------------------
+# repolint rules
+# ---------------------------------------------------------------------------
+def test_repolint_repo_src_is_clean():
+    assert lint_paths([REPO_ROOT / "src"]) == []
+
+
+def test_repolint_flags_shim_imports_outside_tests():
+    src = ("from repro.quant import ptq\n"
+           "import repro.core.capsnet_q7\n"
+           "from repro.core.capsnet import CAPSNET_CONFIGS\n")
+    findings = lint_source(src, "src/repro/somewhere.py")
+    assert [f.rule for f in findings] == ["shim-import"] * 3
+    assert [f.line for f in findings] == [1, 2, 3]
+    assert lint_source(src, "tests/test_whatever.py") == []
+    assert lint_source(src, "src/repro/nn/compat.py") == []
+
+
+def test_repolint_flags_unregistered_variant_strings():
+    src = ('spec = ModelSpec(softmax_impl="turbo")\n'
+           'VariantSet(squash="approx")\n'
+           'REGISTRY.get("squash", "nope")\n')
+    findings = lint_source(src, "src/repro/somewhere.py")
+    assert [(f.rule, f.line) for f in findings] == \
+        [("unregistered-variant-string", 1),
+         ("unregistered-variant-string", 3)]
+
+
+def test_repolint_reports_syntax_errors():
+    (f,) = lint_source("def broken(:\n", "src/repro/x.py")
+    assert f.rule == "syntax-error"
+
+
+def test_repolint_cli(tmp_path, capsys):
+    from repro.analysis.repolint import main
+    bad = tmp_path / "bad.py"
+    bad.write_text("import repro.quant.ptq\n")
+    assert main([str(bad)]) == 1
+    assert "shim-import" in capsys.readouterr().out
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert main([str(good)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# property test: random valid programs are checker-clean AND bit-exact;
+# a random shift tamper is always caught at the right op
+# ---------------------------------------------------------------------------
+_GEOMETRY_SPACE = dict(
+    size=[10, 12], filters=[4, 6], stride=[1, 2], caps=[2, 4],
+    classes=[2, 3], routings=[1, 2, 3], rounding=["floor", "nearest"],
+    softmax=list(REGISTRY.names("softmax")),
+    squash=list(REGISTRY.names("squash")), delta=[1, 2, 3, 4])
+
+
+def _sampled_geometries(n, seed=0):
+    """n deterministic samples of the geometry space (the fallback
+    driver when hypothesis is not installed; same space either way)."""
+    import random
+    rng = random.Random(seed)
+    return [{k: rng.choice(v) for k, v in _GEOMETRY_SPACE.items()}
+            for _ in range(n)]
+
+
+def _property_clean_program_bit_exact(g):
+    import jax
+    import jax.numpy as jnp
+    from repro.nn.config import CapsNetConfig
+    from repro.nn.pipeline import CapsPipeline
+
+    cfg = CapsNetConfig(
+        f"prop_{g['size']}_{g['filters']}_{g['stride']}",
+        (g["size"], g["size"], 1), (g["filters"],), (3,), (g["stride"],),
+        pcap_caps=g["caps"], pcap_dim=4, pcap_kernel=3, pcap_stride=2,
+        num_classes=g["classes"], caps_dim=4, routings=g["routings"])
+    pipe = CapsPipeline.from_config(
+        cfg, variants=VariantSet(softmax=g["softmax"], squash=g["squash"]))
+    params = pipe.init(jax.random.key(1))
+    rng = np.random.default_rng(3)
+    calib = jnp.asarray(rng.uniform(
+        0, 1, (4,) + cfg.input_shape).astype(np.float32))
+    qnet = pipe.quantize(params, calib, rounding=g["rounding"])
+    program = lower(qnet)
+
+    result = check_program(program)
+    assert result.ok, result.format()
+    x_q = np.asarray(qnet.quantize_input(
+        jnp.asarray(rng.uniform(0, 1, (2,) + cfg.input_shape)
+                    .astype(np.float32))))
+    np.testing.assert_array_equal(
+        EdgeVM(program).run(x_q),
+        np.asarray(qnet.forward(jnp.asarray(x_q))))
+
+    # any shift perturbation is caught, at the op that was tampered
+    bad = tamper_attrs(program, 0,
+                       out_shift=program.ops[0].attrs["out_shift"]
+                       + g["delta"])
+    tampered = check_program(bad)
+    assert not tampered.ok
+    assert any(d.op_index == 0 for d in
+               tampered.by_check("plan.out-shift-mismatch")
+               + tampered.by_check("ranges.shift-range"))
+
+
+try:                                 # hypothesis drives the sampling when
+    import hypothesis                # available; the container may lack it
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(g=st.fixed_dictionaries(
+        {k: st.sampled_from(v) for k, v in _GEOMETRY_SPACE.items()}))
+    def test_property_clean_programs_run_bit_exact(g):
+        _property_clean_program_bit_exact(g)
+
+except ImportError:
+    @pytest.mark.parametrize("g", _sampled_geometries(4),
+                             ids=lambda g: "-".join(
+                                 str(v) for v in g.values()))
+    def test_property_clean_programs_run_bit_exact(g):
+        _property_clean_program_bit_exact(g)
