@@ -46,7 +46,10 @@ def main():
         csv_row(f"serve_batched_{model_id}", wall * 1e6 / n_req,
                 f"{s['images_per_s']:.1f}img/s_speedup="
                 f"{b1_wall / wall:.1f}x_p95={s['p95_ms']:.1f}ms"
-                f"_occ={s['occupancy']:.2f}")
+                f"_occ={s['occupancy']:.2f}",
+                images_per_s=s["images_per_s"],
+                occupancy=s["occupancy"], p95_ms=s["p95_ms"],
+                speedup=b1_wall / wall, waves=s["waves"])
 
 
 if __name__ == "__main__":

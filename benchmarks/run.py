@@ -1,7 +1,8 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness entry point:
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
+        [--out artifacts/bench] [--stamp <id>]
 
 Sections (one per paper table):
   Table 2  -> bench_quantization   (footprint / PTQ cost)
@@ -16,41 +17,104 @@ beyond-paper:
   variants   -> bench_variants     (ISLPED'22 approx softmax/squash:
                                     accuracy/throughput per registered
                                     operator-variant set x rounding)
+  observability -> process metrics snapshot (pallas fallback counters;
+                                    the validator gates on zero
+                                    default-variant fallbacks)
 plus the roofline summary from the dry-run artifacts (if present).
+
+Every section also lands as `<out>/BENCH_<section>.json`
+(schema repro.bench/v1, see benchmarks/util.py); `--stamp` (or
+REPRO_BENCH_STAMP — CI passes the commit SHA) identifies the run
+instead of ambient time, so artifacts are reproducible.
+`benchmarks.validate` checks the emitted set.
 
 CPU wall-clock is the validation substrate (interpret-mode kernels); the
 derived column carries the hardware-independent figure.  `--smoke` (CI)
 runs every section at minimal reps/sizes so harness bit-rot fails fast.
 """
+import argparse
 import os
 import sys
 
 
-def main() -> None:
-    if "--smoke" in sys.argv[1:]:
+def _observability_section(util) -> None:
+    """Snapshot the process metrics registry after every section ran:
+    how often the pallas backend fell back to the jnp oracle, split
+    default vs non-default variant (bench_variants legitimately drives
+    non-default fallbacks; a DEFAULT-variant fallback would mean the
+    fused kernels stopped covering the default plan — the validator
+    fails the run on it)."""
+    from repro.nn.backend import BACKENDS
+    from repro.nn.variants import REGISTRY
+    defaults = {REGISTRY.default("softmax"), REGISTRY.default("squash")}
+    fallbacks = BACKENDS["pallas"].fallbacks
+    total = sum(fallbacks.values())
+    default_hits = sum(n for (op, variant), n in fallbacks.items()
+                       if variant in defaults)
+    util.begin_section("observability")
+    util.add_figures(total_fallback_decisions=int(total),
+                     default_variant_fallbacks=int(default_hits),
+                     fallback_series={f"{op}:{variant}": int(n)
+                                      for (op, variant), n
+                                      in fallbacks.items()})
+    util.csv_row("pallas_fallbacks", 0.0,
+                 f"total={total}_default={default_hits}",
+                 total=int(total), default=int(default_hits))
+    util.end_section()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal reps/sizes (CI bit-rot check)")
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="also write BENCH_<section>.json artifacts "
+                    "into DIR (schema repro.bench/v1)")
+    ap.add_argument("--stamp", default=None,
+                    help="run identifier stored in every artifact "
+                    "(default: $REPRO_BENCH_STAMP, else 'unstamped'; "
+                    "CI passes the commit SHA)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    if args.smoke:
         # must land before benchmarks.util is imported (it reads the env)
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    from benchmarks import util
+    if args.out:
+        stamp = args.stamp or os.environ.get("REPRO_BENCH_STAMP",
+                                             "unstamped")
+        util.start_recording(args.out, stamp)
     print("name,us_per_call,derived")
     from benchmarks import (bench_capsule_layer, bench_edge_vm,
                             bench_matmul, bench_primary_caps,
                             bench_quantization, bench_serving,
                             bench_train_caps, bench_variants)
     print("# --- Table 2: quantization framework ---")
+    util.begin_section("quantization", tables=[2])
     bench_quantization.main()
     print("# --- Tables 3/4: int8 matmul variants ---")
+    util.begin_section("matmul", tables=[3, 4])
     bench_matmul.main()
     print("# --- Tables 5/6: primary capsule layer ---")
+    util.begin_section("primary_caps", tables=[5, 6])
     bench_primary_caps.main()
     print("# --- Tables 7/8: capsule layer (dynamic routing) ---")
+    util.begin_section("capsule_layer", tables=[7, 8])
     bench_capsule_layer.main()
     print("# --- Serving: batched int8 engine vs b1 loop ---")
+    util.begin_section("serving")
     bench_serving.main()
     print("# --- Edge export: q7 VM + arena plan ---")
+    util.begin_section("edge_vm")
     bench_edge_vm.main()
     print("# --- Training: float vs QAT steps + Table-2 accuracy ---")
+    util.begin_section("training")
     bench_train_caps.main()
     print("# --- Operator variants: ISLPED'22 approx softmax/squash ---")
+    util.begin_section("variants")
     bench_variants.main()
+    util.end_section()
+    print("# --- Observability: process metrics snapshot ---")
+    _observability_section(util)
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():
@@ -74,6 +138,11 @@ def main() -> None:
                   f"{bound*1e6:.0f},"
                   f"dom={r['dominant'].replace('_s','')}"
                   f"_frac={r['roofline_fraction']:.4f}{speedup}")
+    rec = util.recorder()
+    if rec is not None:
+        rec.end_section()
+        print(f"# wrote {len(rec.written)} BENCH_*.json artifacts "
+              f"(stamp={rec.stamp}) to {rec.out_dir}")
 
 
 if __name__ == "__main__":

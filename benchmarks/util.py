@@ -1,5 +1,24 @@
-"""Benchmark timing helpers."""
+"""Benchmark timing helpers + the BENCH_<section>.json recorder.
+
+Every section of `benchmarks.run` prints its rows as CSV (the
+human-facing stream) and, when recording is on, also lands them in one
+JSON document per section:
+
+    {"schema": "repro.bench/v1", "section": "serving",
+     "stamp": "<run stamp>", "smoke": false,
+     "config": {...},               # what the section ran
+     "figures": {...},              # section-level derived figures
+     "rows": [{"name", "us_per_call", "derived", "figures"}, ...]}
+
+The stamp comes from --stamp / REPRO_BENCH_STAMP (CI passes the commit
+SHA) — never from ambient wall-clock time, so re-running a commit
+produces byte-comparable artifacts.  `benchmarks.validate` checks every
+emitted document against this schema and gates CI on the deterministic
+invariants (occupancy > 0, zero default-variant Pallas fallbacks).
+"""
+import json
 import os
+import pathlib
 import time
 
 import jax
@@ -8,6 +27,80 @@ import jax
 # --smoke`) runs every section with minimal reps/sizes — the point is
 # that each harness still executes, not that its numbers are stable.
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+SCHEMA = "repro.bench/v1"
+
+_RECORDER = None
+
+
+class BenchRecorder:
+    """Accumulates csv_row() calls into per-section JSON artifacts."""
+
+    def __init__(self, out_dir, stamp: str):
+        self.out_dir = pathlib.Path(out_dir)
+        self.stamp = stamp
+        self.section = None
+        self._config: dict = {}
+        self._figures: dict = {}
+        self._rows: list = []
+        self.written: list = []
+
+    def begin_section(self, name: str, **config) -> None:
+        if self.section is not None:
+            self.end_section()
+        self.section = name
+        self._config = dict(config)
+        self._figures = {}
+        self._rows = []
+
+    def add_row(self, name: str, us: float, derived: str,
+                figures: dict) -> None:
+        if self.section is None:        # row outside any section: skip
+            return
+        self._rows.append({"name": name, "us_per_call": float(us),
+                           "derived": derived, "figures": figures})
+
+    def add_figures(self, **figures) -> None:
+        self._figures.update(figures)
+
+    def end_section(self) -> None:
+        if self.section is None:
+            return
+        doc = {"schema": SCHEMA, "section": self.section,
+               "stamp": self.stamp, "smoke": SMOKE,
+               "config": self._config, "figures": self._figures,
+               "rows": self._rows}
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+        path = self.out_dir / f"BENCH_{self.section}.json"
+        path.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        self.written.append(path)
+        self.section = None
+
+
+def start_recording(out_dir, stamp: str) -> BenchRecorder:
+    global _RECORDER
+    _RECORDER = BenchRecorder(out_dir, stamp)
+    return _RECORDER
+
+
+def recorder() -> BenchRecorder | None:
+    return _RECORDER
+
+
+def begin_section(name: str, **config) -> None:
+    if _RECORDER is not None:
+        _RECORDER.begin_section(name, **config)
+
+
+def end_section() -> None:
+    if _RECORDER is not None:
+        _RECORDER.end_section()
+
+
+def add_figures(**figures) -> None:
+    """Attach section-level derived figures to the active section."""
+    if _RECORDER is not None:
+        _RECORDER.add_figures(**figures)
 
 
 def time_call(fn, *args, warmup: int = 2, reps: int = 10) -> float:
@@ -25,5 +118,9 @@ def time_call(fn, *args, warmup: int = 2, reps: int = 10) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def csv_row(name: str, us: float, derived: str):
+def csv_row(name: str, us: float, derived: str, **figures):
+    """Print one CSV row; `figures` are machine-readable extras that
+    only land in the JSON artifact (e.g. occupancy=0.94)."""
     print(f"{name},{us:.1f},{derived}")
+    if _RECORDER is not None:
+        _RECORDER.add_row(name, us, derived, figures)

@@ -1,0 +1,112 @@
+"""Validate BENCH_<section>.json artifacts (schema + invariants):
+
+    PYTHONPATH=src python -m benchmarks.validate artifacts/bench
+
+Checks every `BENCH_*.json` in the directory against the
+`repro.bench/v1` schema (benchmarks/util.py) and gates on the
+deterministic invariants a bench run must satisfy regardless of how
+fast the machine was:
+
+  * serving: every `serve_batched_*` row carries occupancy > 0 —
+    an empty/NaN occupancy means the engine served nothing;
+  * observability: `default_variant_fallbacks == 0` — a fallback on a
+    DEFAULT variant means the fused pallas kernels stopped covering
+    the default plan (non-default fallbacks are expected: the variants
+    section drives them deliberately).
+
+Exit 1 on any finding; CI runs this right after `benchmarks.run
+--smoke --out ...` and uploads the artifacts.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+SCHEMA = "repro.bench/v1"
+
+_TOP_KEYS = {"schema": str, "section": str, "stamp": str, "smoke": bool,
+             "config": dict, "figures": dict, "rows": list}
+_ROW_KEYS = {"name": str, "us_per_call": (int, float), "derived": str,
+             "figures": dict}
+
+
+def validate_doc(doc: dict, where: str) -> list:
+    """Schema findings for one parsed artifact (empty list = clean)."""
+    findings = []
+    for key, typ in _TOP_KEYS.items():
+        if key not in doc:
+            findings.append(f"{where}: missing key {key!r}")
+        elif not isinstance(doc[key], typ):
+            findings.append(f"{where}: {key!r} is {type(doc[key]).__name__},"
+                            f" wanted {typ}")
+    if doc.get("schema") not in (None, SCHEMA):
+        findings.append(f"{where}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    for i, row in enumerate(doc.get("rows", [])):
+        if not isinstance(row, dict):
+            findings.append(f"{where}: rows[{i}] is not an object")
+            continue
+        for key, typ in _ROW_KEYS.items():
+            if key not in row:
+                findings.append(f"{where}: rows[{i}] missing {key!r}")
+            elif not isinstance(row[key], typ):
+                findings.append(f"{where}: rows[{i}].{key} is "
+                                f"{type(row[key]).__name__}, wanted {typ}")
+    return findings
+
+
+def validate_invariants(doc: dict, where: str) -> list:
+    """Deterministic gates (machine-speed independent)."""
+    findings = []
+    if doc.get("section") == "serving":
+        for row in doc.get("rows", []):
+            if not str(row.get("name", "")).startswith("serve_batched_"):
+                continue
+            occ = row.get("figures", {}).get("occupancy")
+            if not isinstance(occ, (int, float)) or not occ > 0:
+                findings.append(
+                    f"{where}: {row.get('name')}: occupancy {occ!r} "
+                    "is not > 0 (engine served nothing?)")
+    if doc.get("section") == "observability":
+        dflt = doc.get("figures", {}).get("default_variant_fallbacks")
+        if dflt != 0:
+            findings.append(
+                f"{where}: default_variant_fallbacks == {dflt!r}, "
+                "wanted 0 — the fused pallas kernels no longer cover "
+                "the default softmax/squash plan")
+    return findings
+
+
+def validate_dir(out_dir) -> tuple:
+    """(checked_paths, findings) over every BENCH_*.json in out_dir."""
+    out_dir = pathlib.Path(out_dir)
+    paths = sorted(out_dir.glob("BENCH_*.json"))
+    findings = []
+    if not paths:
+        findings.append(f"{out_dir}: no BENCH_*.json artifacts found")
+    for path in paths:
+        where = path.name
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            findings.append(f"{where}: unreadable ({e})")
+            continue
+        findings += validate_doc(doc, where)
+        findings += validate_invariants(doc, where)
+    return paths, findings
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    out_dir = argv[0] if argv else "artifacts/bench"
+    paths, findings = validate_dir(out_dir)
+    for f in findings:
+        print(f"FINDING: {f}")
+    print(f"benchmarks.validate: {len(paths)} artifacts, "
+          f"{len(findings)} findings -> "
+          f"{'FAIL' if findings else 'ok'}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,26 +6,40 @@ Loads each artifact, runs the full checker (structure, plan algebra,
 int32 range proofs, arena aliasing) and prints one result block per
 file.  Exit 1 on any finding — CI points this at everything
 `export_caps` produced.
+
+`--profile` additionally prints the static MCU cycle/latency estimate
+of each (passing or failing) artifact on every calibrated profile
+(repro.edge.costmodel: cortex-m7 @ 480 MHz, gap8 @ 170 MHz) — the
+paper's latency tables, derived from the artifact alone.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 
 def main(argv=None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    if not argv:
-        print("usage: python -m repro.analysis <artifact.capsbin> [...]",
-              file=sys.stderr)
-        return 2
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify exported .capsbin artifacts")
+    ap.add_argument("paths", nargs="+", metavar="artifact.capsbin",
+                    help="exported artifacts to check")
+    ap.add_argument("--profile", action="store_true",
+                    help="also print the static per-op cycle/latency "
+                    "estimate on every calibrated MCU profile")
+    args = ap.parse_args(argv)
+
     from repro.analysis.checker import check_program
     from repro.edge.program import EdgeProgram
 
     failed = False
-    for path in argv:
-        result = check_program(EdgeProgram.load(path))
+    for path in args.paths:
+        program = EdgeProgram.load(path)
+        result = check_program(program)
         print(result.format())
         failed = failed or not result.ok
+        if args.profile:
+            from repro.edge import format_estimates
+            print(format_estimates(program))
     return 1 if failed else 0
 
 

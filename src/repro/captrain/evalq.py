@@ -55,7 +55,10 @@ def eval_q7(qnet: QuantCapsNet, images, labels, batch: int = 256) -> float:
 class Table2Row:
     """One (config, variants, rounding) line of the accuracy
     reproduction; `variant` is the operator-variant tag the int8 model
-    ran (softmax+squash, see repro.nn.variants)."""
+    ran (softmax+squash, see repro.nn.variants).  `est_ms_m7` /
+    `est_ms_gap8` are the static MCU latency estimates of the PTQ'd
+    program (repro.edge.costmodel, calibrated to the paper's tables) —
+    the latency axis the Q-CapsNets-style Pareto search consumes."""
     name: str
     rounding: str
     acc_f32: float
@@ -63,6 +66,8 @@ class Table2Row:
     acc_qat: float
     saving_pct: float
     variant: str = VariantSet().tag
+    est_ms_m7: float = float("nan")
+    est_ms_gap8: float = float("nan")
 
     @property
     def delta_ptq(self) -> float:
@@ -121,11 +126,18 @@ def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
         acc_qat = eval_q7(q_qat, images, labels)
 
         fp32 = trainer.pipeline.param_bytes(state["params"]["caps"])
+        # the static MCU latency axis: lower the PTQ'd model once and
+        # price it on both calibrated profiles (QAT shares the exact
+        # geometry, so one estimate covers the row)
+        from repro.edge import lower, total_latency_ms
+        program = lower(q_ptq)
         rows.append(Table2Row(
             name=cfg.name, rounding=rounding, acc_f32=acc_f,
             acc_ptq=acc_ptq, acc_qat=acc_qat,
             saving_pct=100.0 * (1 - q_ptq.memory_bytes() / fp32),
-            variant=vtag))
+            variant=vtag,
+            est_ms_m7=total_latency_ms(program, "cortex-m7"),
+            est_ms_gap8=total_latency_ms(program, "gap8")))
     return rows
 
 
@@ -133,13 +145,15 @@ def format_rows(rows) -> str:
     """The Table-2 analogue printout (paper band: 0.07-0.18 % loss,
     74.99 % memory saving)."""
     head = (f"  {'config':<18}{'variant':<16}{'rounding':<10}{'fp32':>8}"
-            f"{'ptq':>8}{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}")
+            f"{'ptq':>8}{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}"
+            f"{'m7_ms':>9}{'gap8_ms':>9}")
     lines = [head]
     for r in rows:
         lines.append(
             f"  {r.name:<18}{r.variant:<16}{r.rounding:<10}{r.acc_f32:8.4f}"
             f"{r.acc_ptq:8.4f}{r.acc_qat:8.4f}{r.delta_ptq:8.4f}"
-            f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%")
+            f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%"
+            f"{r.est_ms_m7:9.2f}{r.est_ms_gap8:9.2f}")
     lines.append("  paper Table 2: accuracy loss 0.07-0.18 %, "
-                 "saving 74.99 %")
+                 "saving 74.99 % (latency est: repro.edge.costmodel)")
     return "\n".join(lines)

@@ -32,7 +32,7 @@ import pathlib
 import jax
 import jax.numpy as jnp
 
-from repro import ckpt
+from repro import ckpt, obs
 from repro.captrain.decoder import ReconDecoder
 from repro.captrain.steps import make_train_step
 from repro.data.synthetic import ImageTask
@@ -215,10 +215,12 @@ class CapsTrainer:
             if qat and (plan is None or
                         (tc.recalib_every > 0 and i > 0
                          and i % tc.recalib_every == 0)):
-                plan = self.derive_plan(state)
+                with obs.span("train.recalibrate", step=i):
+                    plan = self.derive_plan(state)
             x, y = self.task.batch(i, tc.batch)
-            state, metrics = self.train_step(state, x, y,
-                                             plan if qat else None)
+            with obs.span("train.step", step=i, qat=qat):
+                state, metrics = self.train_step(state, x, y,
+                                                 plan if qat else None)
             row = {"step": int(metrics["step"]),
                    "loss": float(metrics["loss"]),
                    "accuracy": float(metrics["accuracy"]),
@@ -230,5 +232,6 @@ class CapsTrainer:
                     f"acc={row['accuracy']:.3f}"
                     + (" [qat]" if qat else ""))
             if tc.ckpt_every and tc.ckpt_dir and done % tc.ckpt_every == 0:
-                self.save(state, plan if qat else None)
+                with obs.span("train.ckpt", step=done):
+                    self.save(state, plan if qat else None)
         return state, plan, history

@@ -7,6 +7,10 @@ save()/load() single-file artifact }.
 from repro.edge.arena import (ArenaPlan, assign_offsets,  # noqa: F401
                               format_report, lifetimes, memory_report,
                               op_scratch_bytes, plan_arena)
+from repro.edge.costmodel import (MCU_PROFILES, McuProfile,  # noqa: F401
+                                  estimate_all, estimate_program,
+                                  format_estimate, format_estimates,
+                                  get_profile, total_latency_ms)
 from repro.edge.emit_c import emit_c, save_c  # noqa: F401
 from repro.edge.export import export_artifacts, format_export  # noqa: F401
 from repro.edge.importer import (load_qnet, program_config,  # noqa: F401

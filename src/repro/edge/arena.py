@@ -105,10 +105,20 @@ def plan_arena(program: EdgeProgram) -> ArenaPlan:
 # ---------------------------------------------------------------------------
 # memory report (paper Table 2: flash = weights, RAM = activations)
 # ---------------------------------------------------------------------------
-def memory_report(program: EdgeProgram, plan: ArenaPlan | None = None) -> dict:
+def memory_report(program: EdgeProgram, plan: ArenaPlan | None = None,
+                  profile=None) -> dict:
+    """Per-layer flash/RAM breakdown; with `profile` (an MCU profile
+    name or `costmodel.McuProfile`) every row additionally carries the
+    static cycle/latency estimate for that part, and the report gains
+    `est_total_{cycles,ms}` — the paper's Table-2 footprint and its
+    latency tables in one view."""
     plan = plan or plan_arena(program)
+    est = None
+    if profile is not None:
+        from repro.edge import costmodel
+        est = costmodel.estimate_program(program, profile)
     rows = []
-    for op in program.ops:
+    for i, op in enumerate(program.ops):
         out = program.tensor(op.output)
         rows.append({
             "name": op.name, "kind": op.kind,
@@ -117,14 +127,23 @@ def memory_report(program: EdgeProgram, plan: ArenaPlan | None = None) -> dict:
             "act_offset": plan.offsets[op.output],
             "scratch_bytes": op_scratch_bytes(op),
         })
+        if est is not None:
+            rows[-1]["est_cycles"] = est["rows"][i]["cycles"]
+            rows[-1]["est_ms"] = est["rows"][i]["ms"]
     weight_elems = sum(int(w.size) for op in program.ops
                        for w in op.weights.values())
     arena_elems = plan.arena_bytes          # int8: 1 byte per element
     int8_total = program.flash_bytes + plan.arena_bytes
     fp32_total = 4 * weight_elems + 4 * arena_elems
+    extra = {} if est is None else {
+        "profile": est["profile"],
+        "est_total_cycles": est["total_cycles"],
+        "est_total_ms": est["total_ms"],
+    }
     return {
         "name": program.name,
         "rows": rows,
+        **extra,
         "input_bytes": program.input_tensor.nbytes,   # caller's buffer
         "flash_bytes": program.flash_bytes,
         "weight_bytes": program.weight_bytes,
@@ -145,7 +164,8 @@ def format_report(report: dict) -> str:
             f"  {r['name']:<6} {r['kind']:<16} "
             f"flash={r['weight_bytes']:>8d}B  "
             f"act={r['act_bytes']:>7d}B@+{r['act_offset']:<7d} "
-            f"scratch={r['scratch_bytes']}B")
+            f"scratch={r['scratch_bytes']}B"
+            + (f"  est={r['est_ms']:.2f}ms" if "est_ms" in r else ""))
     lines.append(
         f"  flash {report['flash_bytes'] / 1000:.1f} KB "
         f"(weights {report['weight_bytes'] / 1000:.1f} KB + tables) | "
@@ -158,4 +178,9 @@ def format_report(report: dict) -> str:
         f"  total int8 {report['int8_total_bytes'] / 1000:.2f} KB vs fp32 "
         f"{report['fp32_total_bytes'] / 1000:.2f} KB -> "
         f"{report['saving_pct']:.1f}% smaller")
+    if "est_total_ms" in report:
+        lines.append(
+            f"  est. latency on {report['profile']}: "
+            f"{report['est_total_cycles']:,.0f} cycles = "
+            f"{report['est_total_ms']:.2f} ms/inference")
     return "\n".join(lines)

@@ -15,6 +15,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import obs
 from repro.edge.arena import format_report, memory_report, plan_arena
 from repro.edge.emit_c import save_c
 from repro.edge.lower import lower
@@ -38,33 +39,40 @@ def export_artifacts(qnet, out_dir, stem: str | None = None, *,
     silently-wrong artifact behind.  Returns paths, the memory report,
     and the number of verified images."""
     out_dir = Path(out_dir)
-    program = lower(qnet, name=stem)
+    with obs.span("export.lower"):
+        program = lower(qnet, name=stem)
     stem = program.name
-    plan = plan_arena(program)
+    with obs.span("export.arena", program=stem):
+        plan = plan_arena(program)
 
     if check:
         from repro.analysis import check_program
-        check_program(program, arena=plan).raise_if_failed()
+        with obs.span("export.check", program=stem):
+            check_program(program, arena=plan).raise_if_failed()
 
-    paths = program.save(out_dir / stem)
-    paths.update(save_c(program, out_dir, plan))
+    with obs.span("export.save", program=stem):
+        paths = program.save(out_dir / stem)
+    with obs.span("export.emit_c", program=stem):
+        paths.update(save_c(program, out_dir, plan))
     report = memory_report(program, plan)
 
     verified = 0
     if verify_images is not None:
-        reloaded = EdgeProgram.load(paths["capsbin"])
-        if not program.same_as(reloaded):
-            raise AssertionError(f"{paths['capsbin']}: serialize/load "
-                                 "round-trip changed the program")
-        x_q = np.asarray(qnet.quantize_input(np.asarray(verify_images)))
-        v_vm = EdgeVM(reloaded).run(x_q)
-        v_host = np.asarray(qnet.forward(x_q))
-        if not np.array_equal(v_vm, v_host):
-            raise AssertionError(
-                f"{paths['capsbin']}: VM output differs from "
-                f"QuantCapsNet.forward on {len(x_q)} verify images "
-                f"(max |diff| {np.abs(v_vm.astype(np.int32) - v_host.astype(np.int32)).max()})")
-        verified = int(len(x_q))
+        with obs.span("export.verify", program=stem):
+            reloaded = EdgeProgram.load(paths["capsbin"])
+            if not program.same_as(reloaded):
+                raise AssertionError(f"{paths['capsbin']}: serialize/load "
+                                     "round-trip changed the program")
+            x_q = np.asarray(qnet.quantize_input(np.asarray(verify_images)))
+            v_vm = EdgeVM(reloaded).run(x_q)
+            v_host = np.asarray(qnet.forward(x_q))
+            if not np.array_equal(v_vm, v_host):
+                raise AssertionError(
+                    f"{paths['capsbin']}: VM output differs from "
+                    f"QuantCapsNet.forward on {len(x_q)} verify images "
+                    f"(max |diff| "
+                    f"{np.abs(v_vm.astype(np.int32) - v_host.astype(np.int32)).max()})")
+            verified = int(len(x_q))
 
     return {"paths": paths, "report": report, "program": program,
             "arena": plan, "verified": verified, "checked": check}

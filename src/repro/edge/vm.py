@@ -19,8 +19,11 @@ therefore matched in value but not guaranteed to the last bit.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
+from repro import obs
 from repro.edge.program import EdgeOp, EdgeProgram
 from repro.nn.variants import REGISTRY as _VARIANTS
 
@@ -185,7 +188,15 @@ class EdgeVM:
                      * (2.0 ** self.program.input_frac))
         return np.clip(q, INT8_MIN, INT8_MAX).astype(np.int8)
 
-    def run(self, x_q: np.ndarray, *, trace: dict | None = None):
+    def run(self, x_q: np.ndarray, *, trace: dict | None = None,
+            profile: list | None = None):
+        """Execute the schedule.  `trace` captures every intermediate
+        activation (tests use it to pin per-layer bits).  `profile`
+        appends one {"name", "kind", "wall_s"} row per op — the measured
+        host-side counterpart of the static `costmodel` estimate.  Both
+        are pure observation: the op loop computes identical bits with
+        or without them, and when neither is requested (and no ambient
+        obs tracer is installed) the plain loop runs untouched."""
         p = self.program
         x_q = np.asarray(x_q)
         if x_q.dtype != np.int8:
@@ -196,10 +207,21 @@ class EdgeVM:
         if h.shape[1:] != p.input_tensor.shape:
             raise ValueError(f"input shape {x_q.shape} does not match "
                              f"program input {p.input_tensor.shape}")
-        for op in p.ops:
-            h = _RUNNERS[op.kind](op, h, p.rounding)
-            if trace is not None:
-                trace[op.name] = h
+        if trace is None and profile is None and obs.get_tracer() is None:
+            for op in p.ops:                     # hot path: zero obs cost
+                h = _RUNNERS[op.kind](op, h, p.rounding)
+            return h[0] if squeeze else h
+        with obs.span("edgevm.run", program=p.name, batch=h.shape[0]):
+            for op in p.ops:
+                with obs.span(f"edgevm.{op.name}", kind=op.kind):
+                    t0 = time.perf_counter()
+                    h = _RUNNERS[op.kind](op, h, p.rounding)
+                    wall = time.perf_counter() - t0
+                if profile is not None:
+                    profile.append({"name": op.name, "kind": op.kind,
+                                    "wall_s": wall})
+                if trace is not None:
+                    trace[op.name] = h
         return h[0] if squeeze else h
 
 

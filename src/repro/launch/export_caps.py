@@ -60,6 +60,10 @@ def main(argv=None) -> int:
                     help="statically verify the lowered program before "
                     "writing artifacts (repro.analysis: int32 range "
                     "proofs, plan shift algebra, arena aliasing)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the static per-op cycle/latency estimate "
+                    "of the exported program on every calibrated MCU "
+                    "profile (repro.edge.costmodel: cortex-m7, gap8)")
     args = ap.parse_args(argv)
 
     model_id = args.model if "@" in args.model else f"{args.model}@jnp"
@@ -94,6 +98,9 @@ def main(argv=None) -> int:
         return 1
     print(describe(result["program"]))
     print(format_export(result))
+    if args.profile:
+        from repro.edge import format_estimates
+        print(format_estimates(result["program"]))
     return 0
 
 

@@ -73,7 +73,22 @@ def main(argv=None):
                     action=argparse.BooleanOptionalAction,
                     help="statically verify imported --capsbin artifacts "
                     "and --export programs (repro.analysis)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the static MCU cycle/latency estimate of "
+                    "the served model (repro.edge.costmodel, both "
+                    "calibrated profiles)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record spans for the whole run (PTQ, wave "
+                    "compile, enqueue->execute) and write Chrome "
+                    "trace-event JSON to PATH (load in "
+                    "chrome://tracing / Perfetto)")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro import obs
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
 
     # serving waves shard over BATCH=("pod","data"): give "data" the
     # devices (make_host_mesh fills the LAST axis; "model" would make the
@@ -136,6 +151,11 @@ def main(argv=None):
         result = registry.export(model_id, args.export, check=args.check)
         print("[serve_caps] exported MCU artifact:")
         print(format_export(result))
+    if args.profile:
+        from repro.edge import format_estimates, lower
+        program = lower(registry.model(model_id))
+        print("[serve_caps] static MCU latency estimate:")
+        print(format_estimates(program))
 
     engine, wall = serve_window(registry, buckets, images, model_id)
     print("[serve_caps]", engine.metrics.report())
@@ -149,6 +169,12 @@ def main(argv=None):
         print("[serve_caps] b1  :", b1_engine.metrics.report())
         print(f"[serve_caps] batched speedup over b1 loop: "
               f"{b1_wall / max(wall, 1e-9):.2f}x")
+    if tracer is not None:
+        from repro import obs
+        obs.set_tracer(None)
+        tracer.write_chrome_trace(args.trace)
+        print(f"[serve_caps] wrote {tracer.span_count()} spans to "
+              f"{args.trace} (chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -19,12 +19,12 @@ perf change, not a semantics change (tests/test_kernels.py).
 """
 from __future__ import annotations
 
-import collections
 import warnings
 
 import jax.numpy as jnp
 
 from repro.nn.variants import REGISTRY
+from repro.obs import METRICS, MetricsRegistry
 from repro.quant import int8_ops as q
 
 
@@ -103,15 +103,28 @@ class PallasBackend(JnpBackend):
 
     name = "pallas"
 
-    def __init__(self):
-        # (op, variant) -> number of fallback DECISIONS (one per trace /
-        # direct call, not per served image) — the observable counter
-        # the silent-degradation satellite asks for
-        self.fallbacks: collections.Counter = collections.Counter()
+    def __init__(self, metrics: MetricsRegistry | None = None):
+        # fallback DECISIONS (one per trace / direct call, not per
+        # served image) are counted in a metrics registry, labeled
+        # (op, variant).  A bare PallasBackend() gets a private registry
+        # (fresh counters, the semantics the old ad-hoc Counter had);
+        # the shared BACKENDS["pallas"] singleton records into the
+        # process-default obs.METRICS so one snapshot sees it.
+        self.metrics = MetricsRegistry("pallas") if metrics is None \
+            else metrics
+        self._fallback_counter = self.metrics.counter(
+            "pallas.fallback_decisions",
+            help="pallas->jnp-oracle fallback decisions by (op, variant)")
         self._warned: set = set()
 
+    @property
+    def fallbacks(self):
+        """Counter-compatible view keyed by (op, variant) — the
+        pre-registry attribute, preserved (tests/test_variants.py)."""
+        return self._fallback_counter.view("op", "variant")
+
     def _fallback(self, op: str, variant: str):
-        self.fallbacks[(op, variant)] += 1
+        self._fallback_counter.inc(op=op, variant=variant)
         if (op, variant) not in self._warned:
             self._warned.add((op, variant))
             warnings.warn(
@@ -148,7 +161,7 @@ class PallasBackend(JnpBackend):
             logit_frac=plan.logit_frac, rounding=rounding)
 
 
-BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
+BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend(metrics=METRICS)}
 
 
 def get_backend(backend):

@@ -143,10 +143,14 @@ class CapsPipeline:
 
     def quantize(self, params, calib_images, *, rounding: str = "floor",
                  backend: str = "jnp", batch: int = 64) -> "QuantCapsNet":
-        stats = self.calibrate(params, calib_images, batch=batch)
-        plan = self.plan(params, stats)
-        qweights = {l.name: l.quantize(params[l.name], plan[l.name])
-                    for l in self.layers}
+        from repro import obs
+        with obs.span("ptq.calibrate", config=self.cfg.name):
+            stats = self.calibrate(params, calib_images, batch=batch)
+        with obs.span("ptq.plan", config=self.cfg.name):
+            plan = self.plan(params, stats)
+        with obs.span("ptq.quantize_weights", config=self.cfg.name):
+            qweights = {l.name: l.quantize(params[l.name], plan[l.name])
+                        for l in self.layers}
         return QuantCapsNet(pipeline=self, plan=plan, qweights=qweights,
                             rounding=rounding, backend=backend)
 

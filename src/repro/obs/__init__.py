@@ -1,0 +1,20 @@
+"""Unified observability layer (see README.md in this package).
+
+Three faces, all optional at every call site and free when unused:
+
+  * spans   — `obs.span("serve.wave", bucket=4)` context managers that
+              record a hierarchical trace (Chrome trace-event export)
+              through the serving engine, the QAT trainer, and the
+              PTQ/export pipelines;
+  * metrics — `MetricsRegistry` counters/gauges/histograms with labeled
+              series and one `snapshot()` dict (the ad-hoc counters of
+              earlier PRs are now views over these);
+  * cost    — the static MCU cycle/latency model lives with the edge IR
+              in `repro.edge.costmodel` (it reads EdgeProgram geometry),
+              calibrated against the paper's Cortex-M7/GAP-8 tables.
+"""
+from repro.obs.metrics import (DEFAULT_BUCKETS, METRICS,  # noqa: F401
+                               Counter, Gauge, Histogram, MetricsRegistry,
+                               SeriesView)
+from repro.obs.trace import (NULL_SPAN, Span, Tracer,  # noqa: F401
+                             get_tracer, set_tracer, span, tracing)

@@ -28,6 +28,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.serving.metrics import ServeMetrics
 from repro.serving.registry import ModelRegistry
 
@@ -58,7 +59,8 @@ class CapsServeEngine:
     def __init__(self, registry: ModelRegistry,
                  buckets=DEFAULT_BUCKETS,
                  metrics: ServeMetrics | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 tracer: obs.Tracer | None = None):
         buckets = tuple(sorted({int(b) for b in buckets}))
         if not buckets or buckets[0] < 1:
             raise ValueError(f"need positive bucket sizes, got {buckets}")
@@ -66,9 +68,17 @@ class CapsServeEngine:
         self.buckets = buckets
         self.metrics = ServeMetrics() if metrics is None else metrics
         self.clock = clock
+        # explicit tracer wins; otherwise the ambient obs tracer (if
+        # installed) picks the spans up — NULL_SPAN no-ops when neither
+        self.tracer = tracer
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
         self._next_wave = 0
+
+    def _span(self, name: str, **args):
+        if self.tracer is not None:
+            return self.tracer.span(name, **args)
+        return obs.span(name, **args)
 
     # ------------------------------------------------------------------
     # queue side
@@ -99,9 +109,10 @@ class CapsServeEngine:
                 f"{model_id} expects image shape {shape}, got {image.shape}")
         rid = self._next_rid
         self._next_rid += 1
-        t = self.clock()
-        self._queue.append(Request(rid, model_id, image, t))
-        self.metrics.record_submit(t, len(self._queue))
+        with self._span("serve.enqueue", model=model_id):
+            t = self.clock()
+            self._queue.append(Request(rid, model_id, image, t))
+            self.metrics.record_submit(t, len(self._queue))
         return rid
 
     def submit_many(self, images, model_id: str) -> list:
@@ -117,40 +128,53 @@ class CapsServeEngine:
         if not self._queue:
             return []
         model_id = self._queue[0].model_id
-        wave: list = []
-        for r in self._queue:                    # peek, don't pop yet
-            if r.model_id != model_id or len(wave) == self.max_bucket:
-                break
-            wave.append(r)
+        with self._span("serve.wave", model=model_id,
+                        wave=self._next_wave):
+            with self._span("serve.bucket"):
+                wave: list = []
+                for r in self._queue:            # peek, don't pop yet
+                    if (r.model_id != model_id
+                            or len(wave) == self.max_bucket):
+                        break
+                    wave.append(r)
+                bucket = self.bucket_for(len(wave))
+                x = np.zeros(
+                    (bucket,) + self.registry.input_shape(model_id),
+                    np.float32)
+                for i, r in enumerate(wave):
+                    x[i] = r.image
 
-        bucket = self.bucket_for(len(wave))
-        x = np.zeros((bucket,) + self.registry.input_shape(model_id),
-                     np.float32)
-        for i, r in enumerate(wave):
-            x[i] = r.image
+            # registry adds serving.compile_wave / serving.ptq_build
+            # child spans on a cache miss; a hit is just the lookup
+            with self._span("serve.compile", bucket=bucket):
+                exe = self.registry.executable(model_id, bucket)
+            with self._span("serve.execute", bucket=bucket,
+                            n_real=len(wave)):
+                t0 = self.clock()
+                v_q, lengths, pred = exe(x)
+                # host conversion doubles as block_until_ready
+                v_q, lengths, pred = (np.asarray(v_q), np.asarray(lengths),
+                                      np.asarray(pred))
+                t_done = self.clock()
+            with self._span("serve.complete"):
+                # only now is the wave irrevocably served: a raising
+                # executable leaves the queue intact so the requests can
+                # be retried
+                for _ in wave:
+                    self._queue.popleft()
 
-        exe = self.registry.executable(model_id, bucket)
-        t0 = self.clock()
-        v_q, lengths, pred = exe(x)
-        # host conversion doubles as block_until_ready
-        v_q, lengths, pred = (np.asarray(v_q), np.asarray(lengths),
-                              np.asarray(pred))
-        t_done = self.clock()
-        # only now is the wave irrevocably served: a raising executable
-        # leaves the queue intact so the requests can be retried
-        for _ in wave:
-            self._queue.popleft()
-
-        wave_idx = self._next_wave
-        self._next_wave += 1
-        done = [Completion(rid=r.rid, model_id=model_id, v_q=v_q[i],
-                           lengths=lengths[i], pred=int(pred[i]),
-                           wave=wave_idx, bucket=bucket,
-                           latency_s=t_done - r.t_enq)
-                for i, r in enumerate(wave)]
-        self.metrics.record_wave(
-            bucket=bucket, n_real=len(wave), exec_s=t_done - t0,
-            t_done=t_done, latencies_s=[c.latency_s for c in done])
+                wave_idx = self._next_wave
+                self._next_wave += 1
+                done = [Completion(rid=r.rid, model_id=model_id,
+                                   v_q=v_q[i], lengths=lengths[i],
+                                   pred=int(pred[i]), wave=wave_idx,
+                                   bucket=bucket,
+                                   latency_s=t_done - r.t_enq)
+                        for i, r in enumerate(wave)]
+                self.metrics.record_wave(
+                    bucket=bucket, n_real=len(wave), exec_s=t_done - t0,
+                    t_done=t_done,
+                    latencies_s=[c.latency_s for c in done])
         return done
 
     def drain(self) -> list:

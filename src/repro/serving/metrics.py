@@ -7,19 +7,45 @@ the first-submit -> last-completion window.
 
 Everything is recorded through an injectable clock (the engine passes its
 own), so scheduler tests can drive a fake clock and pin exact numbers.
+
+The low-level accessors (`latency_percentile`, `occupancy`,
+`images_per_s`) return nan on an empty window — pinned behavior callers
+rely on for branchless math.  The presentation layer is explicit
+instead: `summary()` carries an `empty` flag with None for every
+undefined figure, and `report()` says "no completed requests" rather
+than formatting nan.
+
+An optional obs.MetricsRegistry mirrors every recording into labeled
+process metrics (serve.requests_total, serve.latency_seconds,
+serve.queue_depth, serve.wave_occupancy) so one registry snapshot sees
+serving next to the pallas/registry counters.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
+
 
 class ServeMetrics:
-    def __init__(self):
+    def __init__(self, registry: obs.MetricsRegistry | None = None):
         self.latencies_s: list = []          # one per completed request
         self.waves: list = []                # dicts: bucket/n_real/exec_s
         self.queue_depths: list = []         # depth sampled at each submit
         self.t_first_submit: float | None = None
         self.t_last_done: float | None = None
+        self.registry = registry
+        if registry is not None:
+            self._c_requests = registry.counter(
+                "serve.requests_total", help="completed requests by bucket")
+            self._h_latency = registry.histogram(
+                "serve.latency_seconds",
+                help="enqueue->completion latency")
+            self._g_queue = registry.gauge(
+                "serve.queue_depth", help="queue depth at last submit")
+            self._g_occupancy = registry.gauge(
+                "serve.wave_occupancy", help="real rows / bucket of the "
+                "last wave")
 
     # ------------------------------------------------------------------
     # recording (called by the engine)
@@ -28,6 +54,8 @@ class ServeMetrics:
         if self.t_first_submit is None:
             self.t_first_submit = t
         self.queue_depths.append(queue_depth)
+        if self.registry is not None:
+            self._g_queue.set(queue_depth)
 
     def record_wave(self, *, bucket: int, n_real: int, exec_s: float,
                     t_done: float, latencies_s) -> None:
@@ -35,6 +63,11 @@ class ServeMetrics:
             {"bucket": bucket, "n_real": n_real, "exec_s": exec_s})
         self.latencies_s.extend(latencies_s)
         self.t_last_done = t_done
+        if self.registry is not None:
+            self._c_requests.inc(n_real, bucket=str(bucket))
+            for lat in latencies_s:
+                self._h_latency.observe(lat)
+            self._g_occupancy.set(n_real / bucket)
 
     # ------------------------------------------------------------------
     # derived figures
@@ -76,21 +109,38 @@ class ServeMetrics:
         return max(self.queue_depths, default=0)
 
     def summary(self) -> dict:
+        """JSON-safe summary: undefined figures (empty window, frozen
+        clock) are None, never nan, and `empty` says which state the
+        window is in — consumers branch on the flag, not on nan
+        propagation."""
+        def _figure(x: float):
+            return None if not np.isfinite(x) else float(x)
+        empty = self.images_done == 0
         return {
+            "empty": empty,
             "images": self.images_done,
             "waves": self.waves_run,
-            "p50_ms": self.latency_percentile(50) * 1e3,
-            "p95_ms": self.latency_percentile(95) * 1e3,
-            "p99_ms": self.latency_percentile(99) * 1e3,
-            "occupancy": self.occupancy(),
-            "images_per_s": self.images_per_s(),
+            "p50_ms": _figure(self.latency_percentile(50) * 1e3),
+            "p95_ms": _figure(self.latency_percentile(95) * 1e3),
+            "p99_ms": _figure(self.latency_percentile(99) * 1e3),
+            "occupancy": _figure(self.occupancy()),
+            "images_per_s": _figure(self.images_per_s()),
             "max_queue_depth": self.max_queue_depth(),
         }
 
     def report(self) -> str:
         s = self.summary()
-        return ("serve: {images} imgs in {waves} waves | "
-                "latency p50 {p50_ms:.1f} / p95 {p95_ms:.1f} / "
-                "p99 {p99_ms:.1f} ms | occupancy {occupancy:.2f} | "
-                "{images_per_s:.1f} img/s | "
-                "max queue {max_queue_depth}").format(**s)
+        if s["empty"]:
+            return ("serve: no completed requests "
+                    f"(queued submits: {len(self.queue_depths)}, "
+                    f"max queue {s['max_queue_depth']})")
+        def _ms(x):
+            return "n/a" if x is None else f"{x:.1f}"
+        ips = ("n/a" if s["images_per_s"] is None
+               else f"{s['images_per_s']:.1f}")
+        occ = ("n/a" if s["occupancy"] is None
+               else f"{s['occupancy']:.2f}")
+        return (f"serve: {s['images']} imgs in {s['waves']} waves | "
+                f"latency p50 {_ms(s['p50_ms'])} / p95 {_ms(s['p95_ms'])} "
+                f"/ p99 {_ms(s['p99_ms'])} ms | occupancy {occ} | "
+                f"{ips} img/s | max queue {s['max_queue_depth']}")

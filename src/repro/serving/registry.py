@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data.synthetic import make_image_dataset
 from repro.nn.config import (CAPSNET_CONFIGS, CIFAR10, MNIST, SMALLNORB,
                              CapsNetConfig)
@@ -97,19 +98,46 @@ def default_specs() -> dict:
 
 
 class ModelRegistry:
-    def __init__(self, specs: dict | None = None, mesh=None):
+    def __init__(self, specs: dict | None = None, mesh=None,
+                 metrics: obs.MetricsRegistry | None = None):
         self.specs = dict(specs) if specs is not None else default_specs()
         self.mesh = mesh
         self._models: dict = {}
         self._execs: dict = {}
-        self.quantize_count = 0
-        self.compile_count = 0
-        self.exec_hits = 0
+        # cache observability lives in a metrics registry (per-model_id
+        # labeled series); a fresh ModelRegistry defaults to its own so
+        # counts stay per-instance like the old loose ints, and
+        # quantize_count / compile_count / exec_hits remain as views
+        self.metrics = obs.MetricsRegistry("serving") if metrics is None \
+            else metrics
+        self._c_quantize = self.metrics.counter(
+            "serving.quantize_builds", help="lazy PTQ builds by model")
+        self._c_compile = self.metrics.counter(
+            "serving.wave_compiles", help="AOT wave compiles by "
+            "(model, bucket)")
+        self._c_hits = self.metrics.counter(
+            "serving.wave_cache_hits", help="wave-executable cache hits")
+        self._c_fallback = self.metrics.counter(
+            "serving.variant_fallbacks", help="models served through the "
+            "pallas->oracle variant fallback")
         # model_id -> variant tag for models whose pallas backend falls
         # back to the jnp oracle on non-default operator variants (the
         # engine-side view of PallasBackend.fallbacks; warned once each)
         self.variant_fallbacks: dict = {}
         self._warned_fallbacks: set = set()
+
+    # compatibility views over the metrics registry (the pre-obs ints)
+    @property
+    def quantize_count(self) -> int:
+        return int(self._c_quantize.total())
+
+    @property
+    def compile_count(self) -> int:
+        return int(self._c_compile.total())
+
+    @property
+    def exec_hits(self) -> int:
+        return int(self._c_hits.total())
 
     # ------------------------------------------------------------------
     # models
@@ -146,6 +174,7 @@ class ModelRegistry:
             self.variant_fallbacks.pop(model_id, None)   # no longer stale
             return
         self.variant_fallbacks[model_id] = vs.tag
+        self._c_fallback.inc(model=model_id, variant=vs.tag)
         if (model_id, vs.tag) not in self._warned_fallbacks:
             self._warned_fallbacks.add((model_id, vs.tag))
             warnings.warn(
@@ -180,8 +209,9 @@ class ModelRegistry:
             except KeyError:
                 raise KeyError(
                     f"unknown model {model_id!r}; have {self.model_ids()}")
-            self._models[model_id] = spec.build()
-            self.quantize_count += 1
+            with obs.span("serving.ptq_build", model=model_id):
+                self._models[model_id] = spec.build()
+            self._c_quantize.inc(model=model_id)
             self._note_variant_fallback(model_id, self._models[model_id])
         return self._models[model_id]
 
@@ -221,12 +251,13 @@ class ModelRegistry:
     def executable(self, model_id: str, bucket: int) -> sharded.CompiledWave:
         key = (model_id, bucket)
         if key in self._execs:
-            self.exec_hits += 1
+            self._c_hits.inc(model=model_id, bucket=str(bucket))
             return self._execs[key]
-        exe = sharded.compile_wave(self.model(model_id), bucket,
-                                   mesh=self.mesh)
+        with obs.span("serving.compile_wave", model=model_id, bucket=bucket):
+            exe = sharded.compile_wave(self.model(model_id), bucket,
+                                       mesh=self.mesh)
         self._execs[key] = exe
-        self.compile_count += 1
+        self._c_compile.inc(model=model_id, bucket=str(bucket))
         return exe
 
 
