@@ -37,7 +37,8 @@ def main():
 
         us = util.time_call(lambda: vm.run(x_q))
         csv_row(f"edge_vm_{model_id}", us / n,
-                f"{n / (us * 1e-6):.1f}img/s")
+                f"{n / (us * 1e-6):.1f}img/s",
+                images_per_s=n / (us * 1e-6))
 
         plan = plan_arena(program)
         rep = memory_report(program, plan)
@@ -46,7 +47,11 @@ def main():
                 f"_saved={100 * (1 - plan.arena_bytes / plan.naive_bytes):.0f}%"
                 f"_flash={rep['flash_bytes'] / 1000:.1f}KB"
                 f"_ram={rep['ram_bytes'] / 1000:.1f}KB"
-                f"_vs_fp32={rep['saving_pct']:.1f}%")
+                f"_vs_fp32={rep['saving_pct']:.1f}%",
+                arena_bytes=plan.arena_bytes,
+                naive_bytes=plan.naive_bytes,
+                flash_bytes=rep["flash_bytes"],
+                ram_bytes=rep["ram_bytes"])
 
 
 if __name__ == "__main__":

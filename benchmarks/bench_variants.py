@@ -39,7 +39,8 @@ def main():
     images, labels = make_image_dataset("edge_tiny", eval_n, seed=123_123)
     acc_f = eval_float(trainer.pipeline, state["params"]["caps"],
                        images, labels)
-    csv_row("variant_fp32_reference", 0.0, f"acc={acc_f:.4f}")
+    csv_row("variant_fp32_reference", 0.0, f"acc={acc_f:.4f}",
+            acc=float(acc_f))
 
     baseline = VariantSet()                      # q7+exact
     sweep = [baseline] + [vs for vs in all_variant_sets()
@@ -56,7 +57,7 @@ def main():
                 acc_base = acc
             csv_row(f"variant_{vs.tag}_{rounding}", us / timed_n,
                     f"acc={acc:.4f}_dfp32={acc_f - acc:+.4f}"
-                    f"_dq7={acc - acc_base:+.4f}")
+                    f"_dq7={acc - acc_base:+.4f}", acc=float(acc))
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 """Benchmark harness entry point:
 
     PYTHONPATH=src python -m benchmarks.run [--smoke]
-        [--out artifacts/bench] [--stamp <id>]
+        [--out artifacts/bench] [--stamp <id>] [--sections a,b,...]
 
 Sections (one per paper table):
   Table 2  -> bench_quantization   (footprint / PTQ cost)
@@ -74,6 +74,10 @@ def main(argv=None) -> None:
                     help="run identifier stored in every artifact "
                     "(default: $REPRO_BENCH_STAMP, else 'unstamped'; "
                     "CI passes the commit SHA)")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run "
+                    "(default: all), e.g. serving,edge_vm,variants,"
+                    "observability — the perf-gate set CI re-records")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     if args.smoke:
         # must land before benchmarks.util is imported (it reads the env)
@@ -88,33 +92,41 @@ def main(argv=None) -> None:
                             bench_matmul, bench_primary_caps,
                             bench_quantization, bench_serving,
                             bench_train_caps, bench_variants)
-    print("# --- Table 2: quantization framework ---")
-    util.begin_section("quantization", tables=[2])
-    bench_quantization.main()
-    print("# --- Tables 3/4: int8 matmul variants ---")
-    util.begin_section("matmul", tables=[3, 4])
-    bench_matmul.main()
-    print("# --- Tables 5/6: primary capsule layer ---")
-    util.begin_section("primary_caps", tables=[5, 6])
-    bench_primary_caps.main()
-    print("# --- Tables 7/8: capsule layer (dynamic routing) ---")
-    util.begin_section("capsule_layer", tables=[7, 8])
-    bench_capsule_layer.main()
-    print("# --- Serving: batched int8 engine vs b1 loop ---")
-    util.begin_section("serving")
-    bench_serving.main()
-    print("# --- Edge export: q7 VM + arena plan ---")
-    util.begin_section("edge_vm")
-    bench_edge_vm.main()
-    print("# --- Training: float vs QAT steps + Table-2 accuracy ---")
-    util.begin_section("training")
-    bench_train_caps.main()
-    print("# --- Operator variants: ISLPED'22 approx softmax/squash ---")
-    util.begin_section("variants")
-    bench_variants.main()
-    util.end_section()
-    print("# --- Observability: process metrics snapshot ---")
-    _observability_section(util)
+    sections = [
+        ("quantization", {"tables": [2]}, bench_quantization.main,
+         "Table 2: quantization framework"),
+        ("matmul", {"tables": [3, 4]}, bench_matmul.main,
+         "Tables 3/4: int8 matmul variants"),
+        ("primary_caps", {"tables": [5, 6]}, bench_primary_caps.main,
+         "Tables 5/6: primary capsule layer"),
+        ("capsule_layer", {"tables": [7, 8]}, bench_capsule_layer.main,
+         "Tables 7/8: capsule layer (dynamic routing)"),
+        ("serving", {}, bench_serving.main,
+         "Serving: batched int8 engine vs b1 loop"),
+        ("edge_vm", {}, bench_edge_vm.main,
+         "Edge export: q7 VM + arena plan"),
+        ("training", {}, bench_train_caps.main,
+         "Training: float vs QAT steps + Table-2 accuracy"),
+        ("variants", {}, bench_variants.main,
+         "Operator variants: ISLPED'22 approx softmax/squash"),
+        ("observability", {}, lambda: _observability_section(util),
+         "Observability: process metrics snapshot"),
+    ]
+    only = None
+    if args.sections:
+        only = set(args.sections.split(","))
+        unknown = only - util.KNOWN_SECTIONS
+        if unknown:
+            ap.error(f"unknown sections {sorted(unknown)}; known: "
+                     f"{sorted(util.KNOWN_SECTIONS)}")
+    for name, config, fn, title in sections:
+        if only is not None and name not in only:
+            continue
+        print(f"# --- {title} ---")
+        if name != "observability":    # it opens its own section
+            util.begin_section(name, **config)
+        fn()
+        util.end_section()
 
     import pathlib
     if pathlib.Path("artifacts/dryrun").exists():

@@ -23,12 +23,14 @@ import time
 
 import jax
 
+# schema id + known-section registry live in the validator (the module
+# that enforces them); re-exported here for the emitters
+from benchmarks.validate import KNOWN_SECTIONS, SCHEMA  # noqa: F401
+
 # CI bit-rot check: REPRO_BENCH_SMOKE=1 (or `python -m benchmarks.run
 # --smoke`) runs every section with minimal reps/sizes — the point is
 # that each harness still executes, not that its numbers are stable.
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
-
-SCHEMA = "repro.bench/v1"
 
 _RECORDER = None
 

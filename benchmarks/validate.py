@@ -3,10 +3,15 @@
     PYTHONPATH=src python -m benchmarks.validate artifacts/bench
 
 Checks every `BENCH_*.json` in the directory against the
-`repro.bench/v1` schema (benchmarks/util.py) and gates on the
+`repro.bench/v1` schema (this module is the schema's source of truth;
+benchmarks/util.py imports SCHEMA from here) and gates on the
 deterministic invariants a bench run must satisfy regardless of how
 fast the machine was:
 
+  * every doc names a KNOWN section and carries a non-empty stamp —
+    an unknown section means a typo'd `begin_section` (or a section
+    added without registering it here), and an unstamped artifact
+    cannot be tied back to a commit, so neither may become a baseline;
   * serving: every `serve_batched_*` row carries occupancy > 0 —
     an empty/NaN occupancy means the engine served nothing;
   * observability: `default_variant_fallbacks == 0` — a fallback on a
@@ -25,6 +30,12 @@ import sys
 
 SCHEMA = "repro.bench/v1"
 
+# every section benchmarks.run may emit; validate_doc refuses others
+KNOWN_SECTIONS = frozenset({
+    "quantization", "matmul", "primary_caps", "capsule_layer",
+    "serving", "edge_vm", "training", "variants", "observability",
+})
+
 _TOP_KEYS = {"schema": str, "section": str, "stamp": str, "smoke": bool,
              "config": dict, "figures": dict, "rows": list}
 _ROW_KEYS = {"name": str, "us_per_call": (int, float), "derived": str,
@@ -42,6 +53,15 @@ def validate_doc(doc: dict, where: str) -> list:
                             f" wanted {typ}")
     if doc.get("schema") not in (None, SCHEMA):
         findings.append(f"{where}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    section = doc.get("section")
+    if isinstance(section, str) and section not in KNOWN_SECTIONS:
+        findings.append(f"{where}: unknown section {section!r}; known: "
+                        f"{sorted(KNOWN_SECTIONS)}")
+    stamp = doc.get("stamp")
+    if isinstance(stamp, str) and not stamp.strip():
+        findings.append(f"{where}: empty stamp — pass --stamp / "
+                        "REPRO_BENCH_STAMP so the artifact ties back "
+                        "to a commit")
     for i, row in enumerate(doc.get("rows", [])):
         if not isinstance(row, dict):
             findings.append(f"{where}: rows[{i}] is not an object")

@@ -150,11 +150,11 @@ def estimate_program(program: EdgeProgram, profile) -> dict:
     of `program` on `profile` (name or McuProfile)."""
     p = get_profile(profile)
     rows = []
-    for op in program.ops:
+    for i, op in enumerate(program.ops):
         c = op_counts(program, op)
         cycles = op_cycles(c, op.kind, p)
-        rows.append({"name": op.name, "kind": op.kind, **c,
-                     "cycles": cycles, "ms": p.ms(cycles)})
+        rows.append({"op_index": i, "name": op.name, "kind": op.kind,
+                     **c, "cycles": cycles, "ms": p.ms(cycles)})
     total = sum(r["cycles"] for r in rows)
     return {
         "name": program.name,

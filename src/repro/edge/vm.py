@@ -178,7 +178,11 @@ class EdgeVM:
 
     `run` accepts a single sample (the program's per-sample input shape)
     or a batch with a leading axis, always as int8 already quantized to
-    the program's input format (use `quantize_input` for floats)."""
+    the program's input format (use `quantize_input` for floats).
+
+    Profile rows carry `op_index` (schedule position) next to name/kind
+    — the join key `repro.obs.analyze.costmodel_drift` uses to line
+    measured rows up against `costmodel.estimate_program` rows."""
 
     def __init__(self, program: EdgeProgram):
         self.program = program
@@ -192,7 +196,8 @@ class EdgeVM:
             profile: list | None = None):
         """Execute the schedule.  `trace` captures every intermediate
         activation (tests use it to pin per-layer bits).  `profile`
-        appends one {"name", "kind", "wall_s"} row per op — the measured
+        appends one {"op_index", "name", "kind", "wall_s"} row per op
+        — the measured
         host-side counterpart of the static `costmodel` estimate.  Both
         are pure observation: the op loop computes identical bits with
         or without them, and when neither is requested (and no ambient
@@ -212,14 +217,14 @@ class EdgeVM:
                 h = _RUNNERS[op.kind](op, h, p.rounding)
             return h[0] if squeeze else h
         with obs.span("edgevm.run", program=p.name, batch=h.shape[0]):
-            for op in p.ops:
+            for i, op in enumerate(p.ops):
                 with obs.span(f"edgevm.{op.name}", kind=op.kind):
                     t0 = time.perf_counter()
                     h = _RUNNERS[op.kind](op, h, p.rounding)
                     wall = time.perf_counter() - t0
                 if profile is not None:
-                    profile.append({"name": op.name, "kind": op.kind,
-                                    "wall_s": wall})
+                    profile.append({"op_index": i, "name": op.name,
+                                    "kind": op.kind, "wall_s": wall})
                 if trace is not None:
                     trace[op.name] = h
         return h[0] if squeeze else h

@@ -64,6 +64,14 @@ def main(argv=None) -> int:
                     help="print the static per-op cycle/latency estimate "
                     "of the exported program on every calibrated MCU "
                     "profile (repro.edge.costmodel: cortex-m7, gap8)")
+    ap.add_argument("--drift", action="store_true",
+                    help="run the exported program through the NumPy q7 "
+                    "VM with per-op profiling and print the cost-model "
+                    "drift report (repro.obs.analyze.costmodel_drift: "
+                    "measured wall-time shares vs static cycle shares, "
+                    "per calibrated MCU profile)")
+    ap.add_argument("--drift-n", type=int, default=8,
+                    help="images for the --drift measurement batch")
     args = ap.parse_args(argv)
 
     model_id = args.model if "@" in args.model else f"{args.model}@jnp"
@@ -101,6 +109,16 @@ def main(argv=None) -> int:
     if args.profile:
         from repro.edge import format_estimates
         print(format_estimates(result["program"]))
+    if args.drift:
+        from repro.edge.vm import EdgeVM
+        from repro.obs.analyze import costmodel_drift, format_drift
+        program = result["program"]
+        vm = EdgeVM(program)
+        n = max(args.drift_n, 1)
+        x_q = vm.quantize_input(spec.images(n, seed=0))
+        rows: list = []
+        vm.run(x_q, profile=rows)
+        print(format_drift(costmodel_drift(program, rows, batch=n)))
     return 0
 
 

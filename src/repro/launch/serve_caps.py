@@ -82,20 +82,35 @@ def main(argv=None):
                     "compile, enqueue->execute) and write Chrome "
                     "trace-event JSON to PATH (load in "
                     "chrome://tracing / Perfetto)")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="print the trace analyzer's report of this "
+                    "run (repro.obs.analyze: span stats, wave critical "
+                    "paths, per-request timelines); implies recording "
+                    "spans even without --trace")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="dump the run's final metrics snapshots as "
+                    "JSON on exit (schema repro.metrics/v1: process + "
+                    "run registries + the serve window summary); "
+                    "repro.obs.analyze accepts it via --metrics")
     args = ap.parse_args(argv)
 
+    from repro import obs
     tracer = None
-    if args.trace:
-        from repro import obs
+    if args.trace or args.trace_summary:
         tracer = obs.Tracer()
         obs.set_tracer(tracer)
+    # one run-scoped registry sees the model-registry counters and the
+    # serve window's ServeMetrics mirror; METRICS (process) keeps the
+    # singleton counters (pallas fallbacks)
+    run_metrics = obs.MetricsRegistry("serve_caps") \
+        if args.metrics_out else None
 
     # serving waves shard over BATCH=("pod","data"): give "data" the
     # devices (make_host_mesh fills the LAST axis; "model" would make the
     # batch constraint a 1x1 no-op and replicate every wave)
     mesh = make_host_mesh(("pod", "model", "data")) \
         if args.mesh == "host" else None
-    registry = ModelRegistry(mesh=mesh)
+    registry = ModelRegistry(mesh=mesh, metrics=run_metrics)
     buckets = tuple(int(b) for b in args.buckets.split(","))
 
     if args.capsbin:
@@ -157,7 +172,8 @@ def main(argv=None):
         print("[serve_caps] static MCU latency estimate:")
         print(format_estimates(program))
 
-    engine, wall = serve_window(registry, buckets, images, model_id)
+    engine, wall = serve_window(registry, buckets, images, model_id,
+                                metrics_registry=run_metrics)
     print("[serve_caps]", engine.metrics.report())
     print(f"[serve_caps] executables compiled: {registry.compile_count}, "
           f"cache hits: {registry.exec_hits}")
@@ -169,12 +185,27 @@ def main(argv=None):
         print("[serve_caps] b1  :", b1_engine.metrics.report())
         print(f"[serve_caps] batched speedup over b1 loop: "
               f"{b1_wall / max(wall, 1e-9):.2f}x")
+    if args.metrics_out:
+        import json
+        import pathlib
+        doc = {"schema": "repro.metrics/v1",
+               "process": obs.METRICS.snapshot(),
+               "run": run_metrics.snapshot(),
+               "serve_summary": engine.metrics.summary()}
+        path = pathlib.Path(args.metrics_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        print(f"[serve_caps] wrote metrics snapshot to {path}")
     if tracer is not None:
-        from repro import obs
         obs.set_tracer(None)
-        tracer.write_chrome_trace(args.trace)
-        print(f"[serve_caps] wrote {tracer.span_count()} spans to "
-              f"{args.trace} (chrome://tracing)")
+        if args.trace:
+            tracer.write_chrome_trace(args.trace)
+            print(f"[serve_caps] wrote {tracer.span_count()} spans to "
+                  f"{args.trace} (chrome://tracing)")
+        if args.trace_summary:
+            from repro.obs import analyze
+            print("[serve_caps] trace summary:")
+            print(analyze.format_analysis(analyze.analyze(tracer)))
 
 
 if __name__ == "__main__":

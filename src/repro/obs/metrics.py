@@ -123,6 +123,42 @@ class Histogram(_Instrument):
         s = self._series.get(_key(labels))
         return 0.0 if s is None else s["sum"]
 
+    def percentile(self, p: float, **labels) -> float | None:
+        """Bucket-resolution p-th percentile of one labeled series.
+
+        Tiny samples are pinned, never interpolated: 0 observations ->
+        None, 1 or 2 observations -> the exact max (any interpolation
+        between two points is presentation noise, not signal).  With
+        n >= 3 the estimate is the nearest-rank bucket upper bound,
+        clamped to the observed max so the +inf bucket (and a sparse top
+        bucket) can never report a value no observation reached."""
+        s = self._series.get(_key(labels))
+        if s is None or s["count"] == 0:
+            return None
+        if s["count"] < 3:
+            return s["max"]
+        rank = max(1, min(s["count"],
+                          -(-int(p * s["count"]) // 100)))  # ceil, no float
+        cum = 0
+        for bound, n in zip(self.buckets, s["bucket_counts"]):
+            cum += n
+            if cum >= rank:
+                return min(bound, s["max"])
+        return s["max"]
+
+    def summary(self, **labels) -> dict:
+        """count/sum/min/max + pinned p50/p95/p99 of one series (the
+        shape `snapshot()` embeds per histogram series)."""
+        s = self._series.get(_key(labels))
+        if s is None:
+            return {"count": 0, "sum": 0.0, "min": None, "max": None,
+                    "p50": None, "p95": None, "p99": None}
+        return {"count": s["count"], "sum": s["sum"],
+                "min": s["min"], "max": s["max"],
+                "p50": self.percentile(50, **labels),
+                "p95": self.percentile(95, **labels),
+                "p99": self.percentile(99, **labels)}
+
 
 class SeriesView(Mapping):
     """Counter-shaped read-only view over one instrument's series.
@@ -205,8 +241,17 @@ class MetricsRegistry:
         out = {}
         for name in sorted(self._instruments):
             ins = self._instruments[name]
-            series = [{"labels": dict(k), "value": _json_value(v)}
-                      for k, v in sorted(ins.series().items())]
+            series = []
+            for k, v in sorted(ins.series().items()):
+                value = _json_value(v)
+                if isinstance(ins, Histogram):
+                    labels = dict(k)
+                    for p in (50, 95, 99):
+                        q = ins.percentile(p, **labels)
+                        value[f"p{p}"] = \
+                            q if q is None or abs(q) != float("inf") \
+                            else None
+                series.append({"labels": dict(k), "value": value})
             entry = {"kind": ins.kind, "help": ins.help, "series": series}
             if isinstance(ins, Histogram):
                 entry["buckets"] = [b if b != float("inf") else "inf"

@@ -54,6 +54,11 @@ class Span:
             return None
         return self.t1 - self.t0
 
+    def note(self, **args) -> None:
+        """Attach args discovered after the span opened (e.g. the wave
+        membership the scheduler only knows once the bucket is built)."""
+        self.args.update(args)
+
     def __enter__(self) -> "Span":
         t = self._tracer
         (t._stack[-1].children if t._stack else t.roots).append(self)
@@ -92,6 +97,9 @@ class _NullSpan:
 
     def __exit__(self, *exc):
         return False
+
+    def note(self, **args):
+        pass
 
     def find(self, name):
         return []

@@ -109,7 +109,7 @@ class CapsServeEngine:
                 f"{model_id} expects image shape {shape}, got {image.shape}")
         rid = self._next_rid
         self._next_rid += 1
-        with self._span("serve.enqueue", model=model_id):
+        with self._span("serve.enqueue", model=model_id, req_id=rid):
             t = self.clock()
             self._queue.append(Request(rid, model_id, image, t))
             self.metrics.record_submit(t, len(self._queue))
@@ -129,7 +129,7 @@ class CapsServeEngine:
             return []
         model_id = self._queue[0].model_id
         with self._span("serve.wave", model=model_id,
-                        wave=self._next_wave):
+                        wave=self._next_wave) as wave_span:
             with self._span("serve.bucket"):
                 wave: list = []
                 for r in self._queue:            # peek, don't pop yet
@@ -143,6 +143,12 @@ class CapsServeEngine:
                     np.float32)
                 for i, r in enumerate(wave):
                     x[i] = r.image
+            # the analyzer reconstructs per-request timelines by joining
+            # enqueue req_id against this membership (comma-joined: span
+            # args are scalar-or-string in the Chrome export)
+            req_ids = ",".join(str(r.rid) for r in wave)
+            wave_span.note(bucket=bucket, n_real=len(wave),
+                           req_ids=req_ids)
 
             # registry adds serving.compile_wave / serving.ptq_build
             # child spans on a cache miss; a hit is just the lookup
@@ -156,7 +162,7 @@ class CapsServeEngine:
                 v_q, lengths, pred = (np.asarray(v_q), np.asarray(lengths),
                                       np.asarray(pred))
                 t_done = self.clock()
-            with self._span("serve.complete"):
+            with self._span("serve.complete", req_ids=req_ids):
                 # only now is the wave irrevocably served: a raising
                 # executable leaves the queue intact so the requests can
                 # be retried
@@ -192,11 +198,16 @@ class CapsServeEngine:
             self.registry.executable(model_id, b)
 
 
-def serve_window(registry, buckets, images, model_id) -> tuple:
+def serve_window(registry, buckets, images, model_id, *,
+                 metrics_registry=None) -> tuple:
     """The measurement harness serve_caps and bench_serving share: serve
     every image through a fresh warmed engine, timing submit -> drained.
-    Returns (engine, wall_s)."""
-    engine = CapsServeEngine(registry, buckets=buckets)
+    Returns (engine, wall_s).  `metrics_registry` mirrors the window's
+    ServeMetrics into an obs.MetricsRegistry (serve_caps --metrics-out
+    snapshots it next to the registry/process counters)."""
+    metrics = None if metrics_registry is None \
+        else ServeMetrics(registry=metrics_registry)
+    engine = CapsServeEngine(registry, buckets=buckets, metrics=metrics)
     engine.warmup(model_id)
     t0 = time.perf_counter()
     engine.submit_many(images, model_id)
