@@ -1,0 +1,71 @@
+"""Numeric-health benchmark: saturation / bound tightness / q7-vs-f32
+SNR of the shipped models under the repro.obs.numerics probes.
+
+One row per model:
+
+  numerics_*   us/img of a fully probed EdgeVM pass, with the health
+               figures the baseline gate tracks — worst per-site
+               saturation rate (may only shrink), worst per-layer SNR
+               against the fwd_f32 oracle (may only improve), bound
+               tightness (observed |acc| peak / statically proven
+               acc_bound), total int32-clip events (exact 0: the
+               verifier proves them impossible), and the probe's
+               overhead factor over the unprobed hot path.
+
+The section figure `int32_clip_total` must be 0 (benchmarks.validate
+invariant) — a nonzero value means runtime behaviour escaped the static
+proofs, which gates the run before the baseline compare even looks.
+"""
+import jax
+import numpy as np
+
+from benchmarks import util
+from benchmarks.util import csv_row
+from repro.edge import EdgeVM, lower
+from repro.obs import numerics as health
+from repro.serving import ModelRegistry
+
+
+def main():
+    if util.SMOKE:
+        cases = [("edge_tiny@jnp", 8)]
+    else:
+        cases = [("edge_tiny@jnp", 64), ("mnist@jnp", 16)]
+    registry = ModelRegistry()
+    total_clips = 0
+    for model_id, n in cases:
+        spec = registry.specs[model_id]
+        qnet = registry.model(model_id)
+        program = lower(qnet)
+        vm = EdgeVM(program)
+        images = np.asarray(spec.images(n, seed=11))
+        x_q = np.asarray(qnet.quantize_input(images))
+
+        base_us = util.time_call(lambda: vm.run(x_q))
+        probe = health.NumericsProbe()
+        with health.probing(probe):
+            probed_us = util.time_call(lambda: vm.run(x_q))
+
+        # the gated report: fresh probe, float oracle for the SNR rows
+        params = qnet.pipeline.init(jax.random.key(spec.seed))
+        report = health.run_numerics(qnet, images, params=params,
+                                     program=program)
+        clips = report.total_int32_clip()
+        total_clips += clips
+        sat = report.worst_saturation_rate()
+        snr = report.min_snr_db()
+        tight = report.max_bound_tightness()
+        csv_row(f"numerics_{model_id}", probed_us / n,
+                f"sat={sat * 100:.2f}%_snr={snr:.1f}dB"
+                f"_tight={tight * 100:.1f}%_clips={clips}"
+                f"_probe={probed_us / base_us:.2f}x",
+                saturation_rate=sat,
+                snr_db=snr,
+                bound_tightness=tight,
+                int32_clip=clips,
+                probe_overhead_x=probed_us / base_us)
+    util.add_figures(int32_clip_total=int(total_clips))
+
+
+if __name__ == "__main__":
+    main()

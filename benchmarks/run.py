@@ -17,6 +17,10 @@ beyond-paper:
   variants   -> bench_variants     (ISLPED'22 approx softmax/squash:
                                     accuracy/throughput per registered
                                     operator-variant set x rounding)
+  numerics   -> bench_numerics      (probed q7 numeric health:
+                                    saturation, bound tightness,
+                                    q7-vs-f32 SNR; the validator gates
+                                    on zero int32-clip events)
   observability -> process metrics snapshot (pallas fallback counters;
                                     the validator gates on zero
                                     default-variant fallbacks)
@@ -89,9 +93,10 @@ def main(argv=None) -> None:
         util.start_recording(args.out, stamp)
     print("name,us_per_call,derived")
     from benchmarks import (bench_capsule_layer, bench_edge_vm,
-                            bench_matmul, bench_primary_caps,
-                            bench_quantization, bench_serving,
-                            bench_train_caps, bench_variants)
+                            bench_matmul, bench_numerics,
+                            bench_primary_caps, bench_quantization,
+                            bench_serving, bench_train_caps,
+                            bench_variants)
     sections = [
         ("quantization", {"tables": [2]}, bench_quantization.main,
          "Table 2: quantization framework"),
@@ -105,6 +110,8 @@ def main(argv=None) -> None:
          "Serving: batched int8 engine vs b1 loop"),
         ("edge_vm", {}, bench_edge_vm.main,
          "Edge export: q7 VM + arena plan"),
+        ("numerics", {}, bench_numerics.main,
+         "Numerics: saturation / bound tightness / q7-vs-f32 SNR"),
         ("training", {}, bench_train_caps.main,
          "Training: float vs QAT steps + Table-2 accuracy"),
         ("variants", {}, bench_variants.main,

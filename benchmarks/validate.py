@@ -17,7 +17,10 @@ fast the machine was:
   * observability: `default_variant_fallbacks == 0` — a fallback on a
     DEFAULT variant means the fused pallas kernels stopped covering
     the default plan (non-default fallbacks are expected: the variants
-    section drives them deliberately).
+    section drives them deliberately);
+  * numerics: `int32_clip_total == 0` — a runtime int32-clip event
+    contradicts the static range proofs (repro.analysis.ranges), so
+    the artifact is evidence of a soundness bug, not a perf number.
 
 Exit 1 on any finding; CI runs this right after `benchmarks.run
 --smoke --out ...` and uploads the artifacts.
@@ -33,7 +36,8 @@ SCHEMA = "repro.bench/v1"
 # every section benchmarks.run may emit; validate_doc refuses others
 KNOWN_SECTIONS = frozenset({
     "quantization", "matmul", "primary_caps", "capsule_layer",
-    "serving", "edge_vm", "training", "variants", "observability",
+    "serving", "edge_vm", "numerics", "training", "variants",
+    "observability",
 })
 
 _TOP_KEYS = {"schema": str, "section": str, "stamp": str, "smoke": bool,
@@ -94,6 +98,13 @@ def validate_invariants(doc: dict, where: str) -> list:
                 f"{where}: default_variant_fallbacks == {dflt!r}, "
                 "wanted 0 — the fused pallas kernels no longer cover "
                 "the default softmax/squash plan")
+    if doc.get("section") == "numerics":
+        clips = doc.get("figures", {}).get("int32_clip_total")
+        if clips != 0:
+            findings.append(
+                f"{where}: int32_clip_total == {clips!r}, wanted 0 — "
+                "runtime int32 clipping contradicts the static range "
+                "proofs (repro.analysis.ranges)")
     return findings
 
 

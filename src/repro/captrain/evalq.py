@@ -58,7 +58,11 @@ class Table2Row:
     ran (softmax+squash, see repro.nn.variants).  `est_ms_m7` /
     `est_ms_gap8` are the static MCU latency estimates of the PTQ'd
     program (repro.edge.costmodel, calibrated to the paper's tables) —
-    the latency axis the Q-CapsNets-style Pareto search consumes."""
+    the latency axis the Q-CapsNets-style Pareto search consumes.
+    `sat_pct` / `snr_db` are the PTQ model's numeric health from a
+    probed pass (repro.obs.numerics): worst per-site saturation rate
+    and worst per-layer q7-vs-f32 SNR — the quality axis of the same
+    search."""
     name: str
     rounding: str
     acc_f32: float
@@ -68,6 +72,8 @@ class Table2Row:
     variant: str = VariantSet().tag
     est_ms_m7: float = float("nan")
     est_ms_gap8: float = float("nan")
+    sat_pct: float = float("nan")
+    snr_db: float = float("nan")
 
     @property
     def delta_ptq(self) -> float:
@@ -131,13 +137,21 @@ def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
         # geometry, so one estimate covers the row)
         from repro.edge import lower, total_latency_ms
         program = lower(q_ptq)
+        # the numeric-health axis: one probed VM pass of the PTQ model
+        # with the trained float weights as the SNR oracle
+        from repro.obs.numerics import run_numerics
+        health = run_numerics(q_ptq, images[:min(64, eval_n)],
+                              params=state["params"]["caps"],
+                              program=program)
         rows.append(Table2Row(
             name=cfg.name, rounding=rounding, acc_f32=acc_f,
             acc_ptq=acc_ptq, acc_qat=acc_qat,
             saving_pct=100.0 * (1 - q_ptq.memory_bytes() / fp32),
             variant=vtag,
             est_ms_m7=total_latency_ms(program, "cortex-m7"),
-            est_ms_gap8=total_latency_ms(program, "gap8")))
+            est_ms_gap8=total_latency_ms(program, "gap8"),
+            sat_pct=100.0 * health.worst_saturation_rate(),
+            snr_db=health.min_snr_db()))
     return rows
 
 
@@ -146,14 +160,16 @@ def format_rows(rows) -> str:
     74.99 % memory saving)."""
     head = (f"  {'config':<18}{'variant':<16}{'rounding':<10}{'fp32':>8}"
             f"{'ptq':>8}{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}"
-            f"{'m7_ms':>9}{'gap8_ms':>9}")
+            f"{'m7_ms':>9}{'gap8_ms':>9}{'sat%':>7}{'snr_db':>8}")
     lines = [head]
     for r in rows:
         lines.append(
             f"  {r.name:<18}{r.variant:<16}{r.rounding:<10}{r.acc_f32:8.4f}"
             f"{r.acc_ptq:8.4f}{r.acc_qat:8.4f}{r.delta_ptq:8.4f}"
             f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%"
-            f"{r.est_ms_m7:9.2f}{r.est_ms_gap8:9.2f}")
+            f"{r.est_ms_m7:9.2f}{r.est_ms_gap8:9.2f}"
+            f"{r.sat_pct:7.2f}{r.snr_db:8.1f}")
     lines.append("  paper Table 2: accuracy loss 0.07-0.18 %, "
-                 "saving 74.99 % (latency est: repro.edge.costmodel)")
+                 "saving 74.99 % (latency est: repro.edge.costmodel; "
+                 "sat/snr: repro.obs.numerics)")
     return "\n".join(lines)

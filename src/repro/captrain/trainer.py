@@ -68,10 +68,14 @@ class TrainConfig:
 
 class CapsTrainer:
     def __init__(self, cfg: CapsNetConfig, tcfg: TrainConfig = TrainConfig(),
-                 mesh=None):
+                 mesh=None, metrics=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
+        # the run's metrics registry: QAT clipping-rate series land here
+        # (pass the serving/run registry to fold them into its snapshot)
+        self.metrics = metrics if metrics is not None \
+            else obs.MetricsRegistry("captrain")
         self.pipeline = CapsPipeline.from_config(
             cfg, softmax_impl=tcfg.softmax_impl,
             squash_impl=tcfg.squash_impl,
@@ -145,6 +149,33 @@ class CapsTrainer:
         stats = self.pipeline.calibrate(params, self.calib_images())
         return self.pipeline.plan(params, stats)
 
+    def qat_clip_rates(self, state, plan: PipelinePlan,
+                       batch: int = 16) -> dict:
+        """Per-layer STE-clipped fraction of one eager fake-quant pass
+        over the calibration set: how often the plan's Qm.n grids clamp
+        what training actually produces (repro.obs.numerics probes the
+        `fake_quant` faces; high rates mean the format allocation is
+        throwing away signal)."""
+        from repro.obs import numerics as health
+        n = max(1, min(batch, self.tcfg.calib_n))
+        probe = health.NumericsProbe()
+        with health.probing(probe):
+            self.pipeline.forward_fq(state["params"]["caps"],
+                                     self.calib_images()[:n], plan,
+                                     rounding=self.tcfg.rounding)
+        return probe.fq_clip_rates()
+
+    def _record_clip_rates(self, state, plan: PipelinePlan,
+                           step: int) -> None:
+        """One `qat.clip_rate` gauge point per layer into the run's
+        metrics registry — the per-recalibration clipping-rate series."""
+        gauge = self.metrics.gauge(
+            "qat.clip_rate",
+            help="STE-clipped activation fraction per layer at each "
+            "QAT plan recalibration")
+        for layer, rate in sorted(self.qat_clip_rates(state, plan).items()):
+            gauge.set(rate, layer=layer, step=str(step))
+
     def quantize(self, state, *, rounding: str | None = None,
                  backend: str = "jnp") -> QuantCapsNet:
         """Trained params -> int8 model via the ordinary PTQ entry point
@@ -217,6 +248,7 @@ class CapsTrainer:
                          and i % tc.recalib_every == 0)):
                 with obs.span("train.recalibrate", step=i):
                     plan = self.derive_plan(state)
+                    self._record_clip_rates(state, plan, i)
             x, y = self.task.batch(i, tc.batch)
             with obs.span("train.step", step=i, qat=qat):
                 state, metrics = self.train_step(state, x, y,

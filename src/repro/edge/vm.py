@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro import obs
+from repro.obs import numerics as _health
 from repro.edge.program import EdgeOp, EdgeProgram
 from repro.nn.variants import REGISTRY as _VARIANTS
 
@@ -101,6 +102,10 @@ def _run_conv(op: EdgeOp, x, rounding: str, relu_override=None):
             else np.right_shift(bias, -bs)
     acc = acc + bias
     _assert_acc_bound(op, acc)
+    if _health._PROBE is not None:     # pure observer — never alters acc
+        _health._PROBE.observe_requant(
+            acc, a.get("out_shift_per_channel") or a["out_shift"],
+            rounding, site="out", bound=a.get("acc_bound"))
     if a.get("out_shift_per_channel"):
         y = _rshift_sat8_vec(acc, a["out_shift_per_channel"], rounding)
     else:
@@ -139,6 +144,9 @@ def _run_routing(op: EdgeOp, u, rounding: str):
     W = op.weights["W"].astype(np.int32)
     acc = np.einsum("jiod,bid->bjio", W, u.astype(np.int32),
                     dtype=np.int32)
+    if _health._PROBE is not None:
+        _health._PROBE.observe_requant(acc, a["uhat_shift"], rounding,
+                                       site="uhat")
     u_hat = _rshift_sat8(acc, a["uhat_shift"], rounding)
 
     out_frac = a["squash_out_frac"]
@@ -150,6 +158,9 @@ def _run_routing(op: EdgeOp, u, rounding: str):
         c = softmax(b.swapaxes(1, 2), a["logit_frac"]).swapaxes(1, 2)
         acc = np.einsum("bji,bjio->bjo", c.astype(np.int32),
                         u_hat.astype(np.int32), dtype=np.int32)
+        if _health._PROBE is not None:
+            _health._PROBE.observe_requant(acc, a["caps_out_shifts"][r],
+                                           rounding, site=f"s[{r}]")
         s_q = _rshift_sat8(acc, a["caps_out_shifts"][r], rounding)
         v = squash(s_q, a["caps_out_fracs"][r], out_frac)
         if r < a["routings"] - 1:
@@ -157,6 +168,10 @@ def _run_routing(op: EdgeOp, u, rounding: str):
                             v.astype(np.int32), dtype=np.int32)
             # agree_shifts assume a Q0.7 squash; compensate plan edits
             # exactly like the jnp backend does
+            if _health._PROBE is not None:
+                _health._PROBE.observe_requant(
+                    acc, a["agree_shifts"][r] + out_frac - 7, rounding,
+                    site=f"agree[{r}]")
             agr = _rshift_sat8(acc, a["agree_shifts"][r] + out_frac - 7,
                                rounding)
             b = _add_q7(b, agr)
@@ -212,16 +227,22 @@ class EdgeVM:
         if h.shape[1:] != p.input_tensor.shape:
             raise ValueError(f"input shape {x_q.shape} does not match "
                              f"program input {p.input_tensor.shape}")
-        if trace is None and profile is None and obs.get_tracer() is None:
+        probe = _health._PROBE
+        if trace is None and profile is None and probe is None \
+                and obs.get_tracer() is None:
             for op in p.ops:                     # hot path: zero obs cost
                 h = _RUNNERS[op.kind](op, h, p.rounding)
             return h[0] if squeeze else h
         with obs.span("edgevm.run", program=p.name, batch=h.shape[0]):
             for i, op in enumerate(p.ops):
+                if probe is not None:
+                    probe.begin_op(i, op.name, op.kind)
                 with obs.span(f"edgevm.{op.name}", kind=op.kind):
                     t0 = time.perf_counter()
                     h = _RUNNERS[op.kind](op, h, p.rounding)
                     wall = time.perf_counter() - t0
+                if probe is not None:
+                    probe.observe_output(h, frac=p.tensor(op.output).frac)
                 if profile is not None:
                     profile.append({"op_index": i, "name": op.name,
                                     "kind": op.kind, "wall_s": wall})

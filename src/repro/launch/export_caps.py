@@ -72,6 +72,19 @@ def main(argv=None) -> int:
                     "per calibrated MCU profile)")
     ap.add_argument("--drift-n", type=int, default=8,
                     help="images for the --drift measurement batch")
+    ap.add_argument("--numerics", action="store_true",
+                    help="run the exported program through the VM with "
+                    "numeric-health probes (repro.obs.numerics) and "
+                    "print the report: saturation, int32 clips, bound "
+                    "tightness vs the static proofs, per-layer q7-vs-"
+                    "f32 SNR; exits 1 on any int32-clip event or any "
+                    "observed value outside its static bound")
+    ap.add_argument("--numerics-out", metavar="PATH", default=None,
+                    help="also write the report as a repro.numerics/v1 "
+                    "JSON doc (repro.obs.analyze accepts it); implies "
+                    "--numerics")
+    ap.add_argument("--numerics-n", type=int, default=8,
+                    help="images for the --numerics probe batch")
     args = ap.parse_args(argv)
 
     model_id = args.model if "@" in args.model else f"{args.model}@jnp"
@@ -119,6 +132,37 @@ def main(argv=None) -> int:
         rows: list = []
         vm.run(x_q, profile=rows)
         print(format_drift(costmodel_drift(program, rows, batch=n)))
+    if args.numerics or args.numerics_out:
+        import jax
+
+        from repro.obs import numerics as health
+        qnet = registry.model(model_id)
+        # the float weights the model was quantized from (ModelSpec.build
+        # inits from the spec seed) — the SNR oracle
+        params = qnet.pipeline.init(jax.random.key(spec.seed))
+        n = max(args.numerics_n, 1)
+        report = health.run_numerics(qnet, spec.images(n, seed=0),
+                                     params=params,
+                                     program=result["program"])
+        print(report.format())
+        if args.numerics_out:
+            import json
+            import pathlib
+            path = pathlib.Path(args.numerics_out)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(report.to_doc(), indent=1,
+                                       sort_keys=True))
+            print(f"[export_caps] wrote numerics report to {path}")
+        findings = health.check_containment(result["program"], report)
+        clips = report.total_int32_clip()
+        if clips:
+            findings.append(f"{clips} int32-clip event(s) observed — "
+                            "statically proven impossible on a "
+                            "verifier-clean program")
+        if findings:
+            for f in findings:
+                print(f"[export_caps] NUMERICS: {f}", file=sys.stderr)
+            return 1
     return 0
 
 

@@ -92,6 +92,11 @@ def main(argv=None):
                     "JSON on exit (schema repro.metrics/v1: process + "
                     "run registries + the serve window summary); "
                     "repro.obs.analyze accepts it via --metrics")
+    ap.add_argument("--numerics-out", metavar="PATH", default=None,
+                    help="after serving, run a probed numeric-health "
+                    "pass of the served model (repro.obs.numerics: "
+                    "saturation, int32 clips, bound tightness, SNR) "
+                    "and write the repro.numerics/v1 JSON doc to PATH")
     args = ap.parse_args(argv)
 
     from repro import obs
@@ -185,6 +190,26 @@ def main(argv=None):
         print("[serve_caps] b1  :", b1_engine.metrics.report())
         print(f"[serve_caps] batched speedup over b1 loop: "
               f"{b1_wall / max(wall, 1e-9):.2f}x")
+    if args.numerics_out:
+        import json
+        import pathlib
+
+        from repro.obs import numerics as health
+        qnet = registry.model(model_id)
+        params = None
+        if not args.capsbin:             # spec path: rebuild the float
+            import jax                   # oracle weights for SNR rows
+            params = qnet.pipeline.init(jax.random.key(spec.seed))
+        report = health.run_numerics(qnet, images[:16], params=params,
+                                     metrics=run_metrics)
+        path = pathlib.Path(args.numerics_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report.to_doc(), indent=1,
+                                   sort_keys=True))
+        print(f"[serve_caps] numerics: int32 clips "
+              f"{report.total_int32_clip()}, worst saturation "
+              f"{report.worst_saturation_rate() * 100:.2f}%, "
+              f"wrote {path}")
     if args.metrics_out:
         import json
         import pathlib

@@ -21,6 +21,7 @@ from repro.nn.config import CapsNetConfig
 from repro.nn.layers import CapsuleRouting, PrimaryCaps, QuantConv2D
 from repro.nn.plans import PipelinePlan, TapStats, plan_scalars
 from repro.nn.variants import VariantSet
+from repro.obs import numerics as _health
 from repro.quant import qformat as qf
 
 
@@ -163,9 +164,18 @@ class CapsPipeline:
         on the plan's Qm.n grids (straight-through gradients).  The plan
         comes from the SAME `plan()` machinery PTQ uses, so a QAT model
         quantizes/lowers/serves with zero new conversion code."""
-        h = qf.fake_quant(x, plan.input_frac)
-        for l in self.layers:
-            h = l.fwd_fq(params[l.name], plan[l.name], h, rounding=rounding)
+        if _health._PROBE is None:                 # hot path untouched
+            h = qf.fake_quant(x, plan.input_frac)
+            for l in self.layers:
+                h = l.fwd_fq(params[l.name], plan[l.name], h,
+                             rounding=rounding)
+            return h
+        with _health.scope("input"):
+            h = qf.fake_quant(x, plan.input_frac)
+        for i, l in enumerate(self.layers):
+            with _health.scope(l.name, index=i, kind=type(l).__name__):
+                h = l.fwd_fq(params[l.name], plan[l.name], h,
+                             rounding=rounding)
         return h
 
     # ------------------------------------------------------------------
@@ -174,10 +184,20 @@ class CapsPipeline:
     def forward_q7(self, qweights, plan: PipelinePlan, x_q, *,
                    backend: str = "jnp", rounding: str = "floor"):
         """x_q int8 image in the plan's input format -> v int8 [B,J,O]."""
+        if _health._PROBE is None:                 # hot path untouched
+            h = x_q
+            for l in self.layers:
+                h = l.fwd_q7(qweights[l.name], plan[l.name], h,
+                             backend=backend, rounding=rounding)
+            return h
         h = x_q
-        for l in self.layers:
-            h = l.fwd_q7(qweights[l.name], plan[l.name], h,
-                         backend=backend, rounding=rounding)
+        for i, l in enumerate(self.layers):
+            with _health.scope(l.name, index=i, kind=type(l).__name__):
+                h = l.fwd_q7(qweights[l.name], plan[l.name], h,
+                             backend=backend, rounding=rounding)
+                if not _health._is_tracer(h):
+                    _health._PROBE.observe_output(
+                        h, frac=plan[l.name].out_frac)
         return h
 
     def quantize_input(self, x, plan: PipelinePlan):

@@ -12,9 +12,18 @@ Three faces, all optional at every call site and free when unused:
   * cost    — the static MCU cycle/latency model lives with the edge IR
               in `repro.edge.costmodel` (it reads EdgeProgram geometry),
               calibrated against the paper's Cortex-M7/GAP-8 tables.
+
+A fourth face, `repro.obs.numerics`, probes numeric health of the
+quantized stack (saturation, bound tightness, range utilization,
+q7-vs-f32 SNR) under the same ambient/zero-cost contract.
 """
 from repro.obs.metrics import (DEFAULT_BUCKETS, METRICS,  # noqa: F401
                                Counter, Gauge, Histogram, MetricsRegistry,
                                SeriesView)
 from repro.obs.trace import (NULL_SPAN, Span, Tracer,  # noqa: F401
                              get_tracer, set_tracer, span, tracing)
+from repro.obs.numerics import (NUMERICS_SCHEMA,  # noqa: F401
+                                NumericsProbe, NumericsReport,
+                                check_containment, get_probe, probing,
+                                run_numerics, run_program_numerics,
+                                set_probe, snr_rows)

@@ -35,7 +35,10 @@ CLI:
 
 where `trace.json` comes from `serve_caps --trace` and `metrics.json`
 from `serve_caps --metrics-out` — one serving run yields trace +
-metrics + this summary from the same process.
+metrics + this summary from the same process.  The positional argument
+also accepts a `repro.numerics/v1` numeric-health doc (export_caps /
+serve_caps `--numerics-out`); `--gate-clips` then exits 1 on any
+recorded int32-clip event.
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ import argparse
 import dataclasses
 import json
 import pathlib
+import sys
 
 # float-noise tolerance for interval containment when rebuilding the
 # span forest from Chrome microsecond timestamps (exact under the fake
@@ -485,17 +489,43 @@ def format_drift(drift: dict) -> str:
 # ---------------------------------------------------------------------------
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Analyze a Chrome trace recorded by serve_caps "
-        "--trace (span stats, wave critical paths, per-request "
-        "timelines)")
+        description="Analyze an observability artifact: a Chrome trace "
+        "recorded by serve_caps --trace (span stats, wave critical "
+        "paths, per-request timelines) or a repro.numerics/v1 doc "
+        "(export_caps --numerics-out / serve_caps --numerics-out)")
     ap.add_argument("trace", help="Chrome trace-event JSON "
-                    "(serve_caps --trace PATH)")
+                    "(serve_caps --trace PATH) or a repro.numerics/v1 "
+                    "numeric-health doc")
     ap.add_argument("--metrics", metavar="PATH", default=None,
                     help="metrics snapshot JSON to fold into the report "
                     "(serve_caps --metrics-out PATH)")
     ap.add_argument("--json", action="store_true",
                     help="emit the report as JSON instead of text")
+    ap.add_argument("--gate-clips", action="store_true",
+                    help="numerics docs only: exit 1 when the doc "
+                    "records any int32-clip event (the CI gate — clips "
+                    "are statically proven impossible on shipped "
+                    "configs)")
     args = ap.parse_args(argv)
+    try:
+        doc = json.loads(pathlib.Path(args.trace).read_text())
+    except (ValueError, OSError):
+        doc = None
+    if isinstance(doc, dict) and doc.get("schema") == "repro.numerics/v1":
+        from repro.obs.numerics import NumericsReport
+        report = NumericsReport.from_doc(doc)
+        if args.json:
+            print(json.dumps(report.to_doc(), indent=1, sort_keys=True))
+        else:
+            print(report.format())
+        clips = report.total_int32_clip()
+        if args.gate_clips and clips:
+            print(f"analyze: GATE FAILED — {clips} int32-clip event(s) "
+                  "recorded (expected 0)", file=sys.stderr)
+            return 1
+        return 0
+    if args.gate_clips:
+        ap.error("--gate-clips needs a repro.numerics/v1 doc")
     metrics = None
     if args.metrics:
         metrics = json.loads(pathlib.Path(args.metrics).read_text())

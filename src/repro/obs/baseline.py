@@ -58,13 +58,15 @@ class Tolerance:
     timing: bool = False
 
     def bound(self, base: float, slack: float) -> float | None:
-        """The worst acceptable new value, or None for exact metrics."""
+        """The worst acceptable new value, or None for exact metrics.
+        Relative to |base| so negative-valued metrics (snr_db) gate in
+        the same direction as positive ones."""
         if self.direction == "exact":
             return None
         rel = self.rel * (slack if self.timing else 1.0)
         if self.direction == "higher":
-            return base * (1.0 - min(rel, 1.0))
-        return base * (1.0 + rel)
+            return base - abs(base) * min(rel, 1.0)
+        return base + abs(base) * rel
 
 
 # The gated metrics.  Row `us_per_call` is implicitly "lower"/timing
@@ -90,6 +92,12 @@ METRIC_POLICY = {
     "naive_bytes": Tolerance("exact", 0.0),
     "flash_bytes": Tolerance("exact", 0.0),
     "ram_bytes": Tolerance("exact", 0.0),
+    # numeric health (numerics rows): saturation may only shrink, SNR
+    # may only improve (small rel absorbs float wobble in the f32
+    # oracle), int32 clips are proven-impossible and must stay 0
+    "saturation_rate": Tolerance("lower", 1.0),
+    "snr_db": Tolerance("higher", 0.25),
+    "int32_clip": Tolerance("exact", 0.0),
 }
 
 US_PER_CALL = Tolerance("lower", 1.5, timing=True)

@@ -14,11 +14,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.obs import numerics as _health
+
 INT8_MIN, INT8_MAX = -128, 127
 
 
 def rshift_sat8(acc, shift: int, rounding: str = "floor"):
     """int32 accumulator -> int8 via arithmetic shift + saturate."""
+    if _health._PROBE is not None:     # observer only; skips jit tracers
+        _health.observe_requant(acc, shift, rounding)
     acc = acc.astype(jnp.int32)
     if shift > 0:
         if rounding == "nearest":
@@ -89,6 +93,8 @@ def rshift_sat8_vec(acc, shifts, rounding: str = "floor"):
     Semantics per lane match the scalar path exactly: positive shifts
     arithmetic-right-shift (nearest adds the half-LSB first), negative
     shifts left-shift, then saturate to int8."""
+    if _health._PROBE is not None:     # observer only; skips jit tracers
+        _health.observe_requant(acc, shifts, rounding)
     acc = acc.astype(jnp.int32)
     shifts = jnp.asarray(shifts, jnp.int32)
     if rounding == "nearest":

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import numerics as _health
+
 INT8_MIN, INT8_MAX = -128, 127
 MAX_FRAC_BITS = 24
 
@@ -119,6 +121,8 @@ def fake_quant(x, n: int, rounding: str = "nearest"):
     x = jnp.asarray(x, jnp.float32)
     scaled = x * (2.0 ** n)
     r = jnp.round(scaled) if rounding == "nearest" else jnp.floor(scaled)
+    if _health._PROBE is not None:     # count STE-clipped grid values
+        _health.observe_fq(r)
     q = jnp.clip(r, INT8_MIN, INT8_MAX) * (2.0 ** -n)
     return _ste(x, q)
 
@@ -134,5 +138,7 @@ def fake_quant_with_fracs(x, ns, axis: int, rounding: str = "nearest"):
         jnp.asarray(ns, jnp.float32).reshape(shape)
     scaled = x * scale
     r = jnp.round(scaled) if rounding == "nearest" else jnp.floor(scaled)
+    if _health._PROBE is not None:     # count STE-clipped grid values
+        _health.observe_fq(r)
     q = jnp.clip(r, INT8_MIN, INT8_MAX) / scale
     return _ste(x, q)

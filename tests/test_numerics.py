@@ -1,0 +1,316 @@
+"""Tests for the numeric-health probe layer (repro.obs.numerics).
+
+Pins, in order:
+  * probes-off is the untouched hot path (no ambient probe, module
+    hooks no-op) and probes-ON execution is bit-identical to
+    probes-off for every shipped config x both roundings — on the
+    EdgeVM, the jnp `fwd_q7` pipeline, and the fake-quant face;
+  * observed range ⊆ static interval bound on every op of every
+    shipped config x rounding (`check_containment` empty, bound
+    tightness <= 1, every VM requant site has a static bound to
+    check against) — the runtime cross-validation of the PR 6
+    verifier;
+  * mutation localization: shrinking a shift in an EdgeProgram makes
+    the saturation telemetry point at the SAME op the static checker
+    flags (conv out_shift and routing uhat_shift);
+  * fake-quant STE-clip counting is exact, and `CapsTrainer` records
+    a per-recalibration `qat.clip_rate` series into its registry;
+  * `NumericsReport` docs round-trip bit-identically through
+    repro.numerics/v1 JSON, the analyze CLI accepts them and
+    `--gate-clips` gates, the bench validator's numerics invariant
+    fires, and the baseline policy gates the new metrics.
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import test_edge
+from repro.analysis import check_program
+from repro.analysis.ranges import requant_bounds
+from repro.edge import EdgeVM, lower
+from repro.obs import MetricsRegistry
+from repro.obs import numerics as nh
+from repro.quant import qformat as qf
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_probe():
+    """Probing is always scoped; a leaked ambient probe would silently
+    slow (and observe) every later test."""
+    assert nh.get_probe() is None
+    yield
+    assert nh.get_probe() is None
+
+
+# ---------------------------------------------------------------------------
+# probes-off: the hot path is untouched
+# ---------------------------------------------------------------------------
+def test_probes_off_hooks_are_noops():
+    # module-level hooks return before touching their arguments
+    nh.observe_requant(np.array([1, 2]), 3, "floor")
+    nh.observe_fq(np.array([999.0]))
+    with nh.scope("anything"):
+        pass
+    assert nh.get_probe() is None
+
+
+def test_probing_restores_previous_probe_on_exception():
+    p = nh.NumericsProbe()
+    with pytest.raises(RuntimeError):
+        with nh.probing(p):
+            assert nh.get_probe() is p
+            raise RuntimeError("boom")
+    assert nh.get_probe() is None
+
+
+# ---------------------------------------------------------------------------
+# bit-parity + containment: every shipped config x both roundings
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rounding", ["floor", "nearest"])
+@pytest.mark.parametrize("name", sorted(test_edge.CONFIGS))
+def test_vm_probed_bit_identical_and_contained(name, rounding):
+    qnet, x_q = test_edge.built(name, rounding)
+    program = lower(qnet)
+    vm = EdgeVM(program)
+    ref = vm.run(x_q)
+
+    probe = nh.NumericsProbe()
+    with nh.probing(probe):
+        out = vm.run(x_q)
+    np.testing.assert_array_equal(ref, out)
+
+    report = nh.NumericsReport(program=program.name,
+                               rounding=program.rounding,
+                               batch=int(x_q.shape[0]), rows=probe.rows())
+    # no int32 clips ever on a verifier-clean program
+    assert report.total_int32_clip() == 0
+    # observed range ⊆ static interval bound, op/tensor-precise
+    assert nh.check_containment(program, report) == []
+    sites, out_ivs = requant_bounds(program)
+    for row in report.rows:
+        if row["family"] == "requant":
+            # every VM requant site has a static bound to check against
+            assert (row["op_index"], row["site"]) in sites
+            tight = row.get("bound_tightness")
+            if tight is not None:
+                assert 0.0 < tight <= 1.0
+        elif row["family"] == "output":
+            assert row["op_index"] in out_ivs
+
+
+@pytest.mark.parametrize("rounding", ["floor", "nearest"])
+def test_fwd_q7_jnp_probed_bit_identical(rounding):
+    qnet, x_q = test_edge.built("capsnet_edge_tiny", rounding)
+    ref = np.asarray(qnet.forward(jnp.asarray(x_q)))
+    probe = nh.NumericsProbe()
+    with nh.probing(probe):
+        out = np.asarray(qnet.forward(jnp.asarray(x_q)))
+    np.testing.assert_array_equal(ref, out)
+    rows = probe.rows()
+    assert {r["op"] for r in rows} == {l.name for l in qnet.pipeline.layers}
+    assert sum(r.get("int32_clip", 0) for r in rows) == 0
+
+
+def test_forward_fq_probed_values_identical():
+    qnet, _ = test_edge.built("capsnet_edge_tiny", "floor")
+    pipe = qnet.pipeline
+    params = pipe.init(__import__("jax").random.key(0))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 1, (2,) + pipe.cfg.input_shape)
+                    .astype(np.float32))
+    ref = np.asarray(pipe.forward_fq(params, x, qnet.plan))
+    probe = nh.NumericsProbe()
+    with nh.probing(probe):
+        out = np.asarray(pipe.forward_fq(params, x, qnet.plan))
+    np.testing.assert_array_equal(ref, out)
+    rates = probe.fq_clip_rates()
+    assert "input" in rates
+    assert all(0.0 <= v <= 1.0 for v in rates.values())
+
+
+# ---------------------------------------------------------------------------
+# mutation localization: telemetry agrees with the static checker
+# ---------------------------------------------------------------------------
+def _mutate_attr(program, op_index, **edits):
+    op = program.ops[op_index]
+    op = dataclasses.replace(op, attrs={**op.attrs, **edits})
+    ops = list(program.ops)
+    ops[op_index] = op
+    return dataclasses.replace(program, ops=tuple(ops))
+
+
+def _worst_saturation_row(report):
+    rows = [r for r in report.rows if r["family"] == "requant"]
+    return max(rows, key=lambda r: r["saturation_rate"])
+
+
+@pytest.mark.parametrize("mutate,site", [
+    (lambda p: _mutate_attr(p, 0, out_shift=p.ops[0].attrs["out_shift"] - 4),
+     "out"),
+    (lambda p: _mutate_attr(p, 2, uhat_shift=p.ops[2].attrs["uhat_shift"] - 4),
+     "uhat"),
+], ids=["conv-out-shift", "routing-uhat-shift"])
+def test_mutation_saturation_localizes_checker_finding(mutate, site):
+    qnet, x_q = test_edge.built("capsnet_edge_tiny", "floor")
+    bad = mutate(lower(qnet))
+
+    result = check_program(bad)
+    assert not result.ok
+    plan_diags = [d for d in result.diagnostics
+                  if d.check.startswith("plan.") and d.op_index is not None]
+    assert plan_diags, [str(d) for d in result.diagnostics]
+    flagged_ops = {d.op_index for d in plan_diags}
+
+    # the mutated shift only changes the requantization, never the
+    # accumulator, so the VM's acc_bound assert stays quiet and the
+    # saturation telemetry is what localizes the defect
+    _, report = nh.run_program_numerics(bad, x_q)
+    worst = _worst_saturation_row(report)
+    assert worst["saturation_rate"] > 0.0
+    assert worst["op_index"] in flagged_ops
+    # the mutated site itself saturates (downstream sites on the same
+    # op may saturate even harder — e.g. s[r] after a blown uhat)
+    (mutated,) = [r for r in report.rows if r["family"] == "requant"
+                  and r["op_index"] in flagged_ops and r["site"] == site]
+    assert mutated["saturation_rate"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# SNR probe mode + report serialization
+# ---------------------------------------------------------------------------
+def _edge_tiny_report(n=4):
+    qnet, _ = test_edge.built("capsnet_edge_tiny", "floor")
+    params = qnet.pipeline.init(__import__("jax").random.key(0))
+    rng = np.random.default_rng(11)
+    images = rng.uniform(0, 1, (n,) + qnet.pipeline.cfg.input_shape) \
+        .astype(np.float32)
+    return nh.run_numerics(qnet, images, params=params)
+
+
+def test_snr_rows_one_per_layer():
+    report = _edge_tiny_report()
+    qnet, _ = test_edge.built("capsnet_edge_tiny", "floor")
+    assert [r["layer"] for r in report.snr] == \
+        [l.name for l in qnet.pipeline.layers]
+    for r in report.snr:
+        assert r["noise_power"] >= 0.0
+        assert r["snr_db"] is None or np.isfinite(r["snr_db"])
+    # the conv front is well-quantized: clearly positive SNR
+    assert report.snr[0]["snr_db"] > 10.0
+
+
+def test_report_doc_roundtrip_identical():
+    report = _edge_tiny_report()
+    doc = json.loads(json.dumps(report.to_doc(), sort_keys=True))
+    back = nh.NumericsReport.from_doc(doc)
+    assert back.rows == report.rows
+    assert back.snr == report.snr
+    assert back.summary() == report.summary()
+    assert back.format() == report.format()
+    with pytest.raises(ValueError):
+        nh.NumericsReport.from_doc({"schema": "repro.trace/v1"})
+
+
+def test_report_summary_names_worst_offenders():
+    report = _edge_tiny_report()
+    s = report.summary()
+    assert s["int32_clip_total"] == 0
+    assert s["worst_tightness"]["tightness"] == \
+        pytest.approx(report.max_bound_tightness())
+    assert s["min_snr"]["snr_db"] == pytest.approx(report.min_snr_db())
+
+
+# ---------------------------------------------------------------------------
+# fake-quant clip counting + the trainer's QAT series
+# ---------------------------------------------------------------------------
+def test_fake_quant_clip_count_exact():
+    probe = nh.NumericsProbe()
+    with nh.probing(probe):
+        qf.fake_quant(jnp.asarray([0.1, 5.0, -5.0]), 7)
+    (rec,) = [r for r in probe.rows() if r["family"] == "fq"]
+    assert rec["n"] == 3
+    assert rec["clipped"] == 2
+    assert rec["clip_rate"] == pytest.approx(2 / 3)
+
+
+def test_trainer_records_clip_rate_series():
+    from repro.captrain.trainer import CapsTrainer, TrainConfig
+    from repro.serving import EDGE_TINY
+
+    reg = MetricsRegistry("testrun")
+    tcfg = TrainConfig(dataset="edge_tiny", batch=8, microbatches=2,
+                       recon_weight=0.0, recalib_every=2, calib_n=8)
+    trainer = CapsTrainer(EDGE_TINY, tcfg, metrics=reg)
+    state = trainer.init_state()
+    state, plan, _ = trainer.fit(state, 3, qat=True)
+    assert plan is not None
+
+    snap = reg.snapshot()
+    assert "qat.clip_rate" in snap
+    series = snap["qat.clip_rate"]["series"]
+    steps = {s["labels"]["step"] for s in series}
+    layers = {s["labels"]["layer"] for s in series}
+    assert steps == {"0", "2"}          # entry + the recalib boundary
+    assert {"conv0", "pcap", "caps"} <= layers
+    assert all(0.0 <= s["value"] <= 1.0 for s in series)
+
+
+def test_run_numerics_streams_metrics():
+    qnet, _ = test_edge.built("capsnet_edge_tiny", "floor")
+    reg = MetricsRegistry("testrun")
+    rng = np.random.default_rng(5)
+    images = rng.uniform(0, 1, (2,) + qnet.pipeline.cfg.input_shape) \
+        .astype(np.float32)
+    nh.run_numerics(qnet, images, metrics=reg)
+    snap = reg.snapshot()
+    assert "numerics.range_utilization" in snap
+    ops = {s["labels"]["op"]
+           for s in snap["numerics.range_utilization"]["series"]}
+    assert {"conv0", "pcap", "caps"} <= ops
+
+
+# ---------------------------------------------------------------------------
+# surfaces: analyze CLI, bench validator, baseline policy
+# ---------------------------------------------------------------------------
+def test_analyze_cli_accepts_numerics_doc(tmp_path, capsys):
+    from repro.obs import analyze
+
+    report = _edge_tiny_report()
+    path = tmp_path / "numerics.json"
+    path.write_text(json.dumps(report.to_doc(), sort_keys=True))
+    assert analyze.main([str(path), "--gate-clips"]) == 0
+    assert "numerics report" in capsys.readouterr().out
+
+    doc = report.to_doc()
+    doc["rows"] = [dict(r, int32_clip=5) if r["family"] == "requant"
+                   else r for r in doc["rows"]]
+    bad = tmp_path / "clipped.json"
+    bad.write_text(json.dumps(doc, sort_keys=True))
+    assert analyze.main([str(bad)]) == 0            # report-only: fine
+    assert analyze.main([str(bad), "--gate-clips"]) == 1
+
+
+def test_validator_gates_numerics_clips():
+    from benchmarks import validate
+
+    assert "numerics" in validate.KNOWN_SECTIONS
+    doc = {"section": "numerics", "figures": {"int32_clip_total": 0}}
+    assert validate.validate_invariants(doc, "x") == []
+    doc["figures"]["int32_clip_total"] = 3
+    findings = validate.validate_invariants(doc, "x")
+    assert findings and "int32_clip_total" in findings[0]
+
+
+def test_baseline_policy_gates_numerics_metrics():
+    from repro.obs.baseline import METRIC_POLICY
+
+    assert METRIC_POLICY["saturation_rate"].direction == "lower"
+    assert METRIC_POLICY["snr_db"].direction == "higher"
+    assert METRIC_POLICY["int32_clip"].direction == "exact"
+    # negative-valued metrics gate in the right direction: the worst
+    # acceptable SNR is BELOW a negative baseline, not above it
+    assert METRIC_POLICY["snr_db"].bound(-6.0, 1.0) < -6.0
+    assert METRIC_POLICY["snr_db"].bound(6.0, 1.0) < 6.0
