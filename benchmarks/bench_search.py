@@ -1,0 +1,56 @@
+"""Search benchmark: the Pareto frontier as a measured, gated artifact.
+
+Runs a small coordinate search on edge_tiny and records ONE stable row
+(`search_frontier`) so baseline comparison never chases frontier
+membership across machines — the per-point detail lives in the
+repro.search/v1 doc, not here.  The row's `acc` figure (best frontier
+accuracy) is baseline-gated; the section figures carry the validator's
+hard invariants: every frontier point statically clean
+(checker_findings == 0) and mutually non-dominated
+(frontier_dominated_pairs == 0).
+
+Smoke mode shrinks training and the budget (CI bit-rot check); the full
+run uses the search CLI's defaults.
+"""
+import time
+
+from benchmarks import util
+from benchmarks.util import csv_row
+from repro.search import SearchConfig, dominated_pairs, run_search
+
+
+def main():
+    budget, f_steps, eval_n = (8, 8, 64) if util.SMOKE else (24, 60, 256)
+    cfg = SearchConfig(model="edge_tiny", strategy="coordinate",
+                       budget=budget, float_steps=f_steps, eval_n=eval_n,
+                       seed=0)
+    t0 = time.perf_counter()
+    doc = run_search(cfg)
+    us = (time.perf_counter() - t0) * 1e6
+
+    front = doc["frontier"]
+    best_acc = max((p["metrics"]["acc"] for p in front), default=0.0)
+    findings = sum(p["metrics"].get("checker_findings", 0) for p in front)
+    unverified = sum(1 for p in front
+                     if not (p["verified"] and p["checked"]))
+    base = doc["baseline"]["metrics"]
+    best_flash = min((p["metrics"]["flash_packed_bytes"] for p in front),
+                     default=0)
+
+    csv_row("search_frontier", us,
+            f"points={len(front)}_evaluated={len(doc['evaluated'])}"
+            f"_best_acc={best_acc:.4f}_best_flash={best_flash}B",
+            acc=best_acc)
+    util.add_figures(
+        frontier_points=len(front),
+        evaluated=len(doc["evaluated"]),
+        rejected=sum(1 for c in doc["evaluated"] if not c["ok"]),
+        checker_findings=findings,
+        frontier_dominated_pairs=dominated_pairs(front),
+        unverified_points=unverified,
+        baseline_flash_packed_bytes=base["flash_packed_bytes"],
+        best_flash_packed_bytes=best_flash)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,9 @@ beyond-paper:
                                     saturation, bound tightness,
                                     q7-vs-f32 SNR; the validator gates
                                     on zero int32-clip events)
+  search     -> bench_search        (quantization/variant Pareto search;
+                                    the validator gates on a clean,
+                                    mutually non-dominated frontier)
   observability -> process metrics snapshot (pallas fallback counters;
                                     the validator gates on zero
                                     default-variant fallbacks)
@@ -95,8 +98,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_capsule_layer, bench_edge_vm,
                             bench_matmul, bench_numerics,
                             bench_primary_caps, bench_quantization,
-                            bench_serving, bench_train_caps,
-                            bench_variants)
+                            bench_search, bench_serving,
+                            bench_train_caps, bench_variants)
     sections = [
         ("quantization", {"tables": [2]}, bench_quantization.main,
          "Table 2: quantization framework"),
@@ -116,6 +119,8 @@ def main(argv=None) -> None:
          "Training: float vs QAT steps + Table-2 accuracy"),
         ("variants", {}, bench_variants.main,
          "Operator variants: ISLPED'22 approx softmax/squash"),
+        ("search", {}, bench_search.main,
+         "Search: verified Pareto frontier over quantization/variants"),
         ("observability", {}, lambda: _observability_section(util),
          "Observability: process metrics snapshot"),
     ]

@@ -20,7 +20,12 @@ fast the machine was:
     section drives them deliberately);
   * numerics: `int32_clip_total == 0` — a runtime int32-clip event
     contradicts the static range proofs (repro.analysis.ranges), so
-    the artifact is evidence of a soundness bug, not a perf number.
+    the artifact is evidence of a soundness bug, not a perf number;
+  * search: at least one frontier point, zero static-checker findings
+    across the frontier, zero mutually-dominating frontier pairs, and
+    every point export/check/bit-verified — a dominated or unverified
+    "frontier" point means repro.search's selection or verification
+    broke, whatever the machine speed.
 
 Exit 1 on any finding; CI runs this right after `benchmarks.run
 --smoke --out ...` and uploads the artifacts.
@@ -37,7 +42,7 @@ SCHEMA = "repro.bench/v1"
 KNOWN_SECTIONS = frozenset({
     "quantization", "matmul", "primary_caps", "capsule_layer",
     "serving", "edge_vm", "numerics", "training", "variants",
-    "observability",
+    "observability", "search",
 })
 
 _TOP_KEYS = {"schema": str, "section": str, "stamp": str, "smoke": bool,
@@ -105,6 +110,20 @@ def validate_invariants(doc: dict, where: str) -> list:
                 f"{where}: int32_clip_total == {clips!r}, wanted 0 — "
                 "runtime int32 clipping contradicts the static range "
                 "proofs (repro.analysis.ranges)")
+    if doc.get("section") == "search":
+        figs = doc.get("figures", {})
+        points = figs.get("frontier_points")
+        if not isinstance(points, int) or points < 1:
+            findings.append(
+                f"{where}: frontier_points == {points!r}, wanted >= 1 — "
+                "the search produced no verified operating point")
+        for key in ("checker_findings", "frontier_dominated_pairs",
+                    "unverified_points"):
+            val = figs.get(key)
+            if val != 0:
+                findings.append(
+                    f"{where}: {key} == {val!r}, wanted 0 — the search "
+                    "frontier is not clean (see benchmarks/bench_search)")
     return findings
 
 

@@ -144,6 +144,29 @@ def check_routing_fields(d: dict, **where) -> list:
             f"uhat_shift {d['uhat_shift']} != in_frac + W_frac - "
             f"uhat_frac = {want}", uhat_shift=d["uhat_shift"],
             expected=want, **where))
+    per_out = {k: tuple(d.get(k) or ())
+               for k in ("W_frac_per_out", "uhat_shift_per_out")}
+    if any(per_out.values()):
+        lengths = {k: len(v) for k, v in per_out.items()}
+        want_len = d.get("num_out") or max(lengths.values())
+        bad = {k: n for k, n in lengths.items() if n != want_len}
+        if bad:
+            diags.append(Diagnostic.of(
+                "plan.per-out-length",
+                f"per-output-capsule tables must all have {want_len} "
+                f"entries (one per output capsule); got {lengths}",
+                expected=want_len, **where))
+        else:
+            for j, (wf, sh) in enumerate(zip(per_out["W_frac_per_out"],
+                                             per_out["uhat_shift_per_out"])):
+                _frac_range(diags, f"W_frac_per_out[{j}]", wf, **where)
+                if sh != d["in_frac"] + wf - d["uhat_frac"]:
+                    diags.append(Diagnostic.of(
+                        "plan.uhat-shift-mismatch",
+                        f"uhat_shift_per_out[{j}] = {sh} != in_frac + "
+                        f"W_frac_per_out[{j}] - uhat_frac = "
+                        f"{d['in_frac'] + wf - d['uhat_frac']}",
+                        channel=j, **where))
     if not 0 <= d["logit_frac"] <= 7:
         diags.append(Diagnostic.of(
             "plan.logit-frac-range",

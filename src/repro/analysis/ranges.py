@@ -229,9 +229,21 @@ def _analyze_routing(op, op_index: int, x_iv, rounding: str, diags):
 
     # u_hat = W @ u: per (j, i) capsule pair, sum over in_dim
     wsum = np.abs(op.weights["W"].astype(np.int64)).sum(axis=3)
-    uhat_bound = int(wsum.max()) * _xmax(x_iv)
-    _check_requant(diags, uhat_bound, a["uhat_shift"], rounding,
-                   "u_hat accumulator", **where)
+    per_out = a.get("uhat_shift_per_out")
+    if per_out:
+        # per-output-capsule shifts: bound each capsule j by ITS rows of
+        # W, against its own shift (one finding per op, like conv)
+        for j, sh in enumerate(per_out):
+            bound_j = int(wsum[j].max()) * _xmax(x_iv)
+            before = len(diags)
+            _check_requant(diags, bound_j, sh, rounding,
+                           "u_hat accumulator", channel=j, **where)
+            if len(diags) > before:
+                break
+    else:
+        uhat_bound = int(wsum.max()) * _xmax(x_iv)
+        _check_requant(diags, uhat_bound, a["uhat_shift"], rounding,
+                       "u_hat accumulator", **where)
     uhat_max = 128                  # |sat8| after the u_hat requantization
 
     _check_softmax(diags, a, a["num_out"], **where)

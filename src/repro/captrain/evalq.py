@@ -62,7 +62,11 @@ class Table2Row:
     `sat_pct` / `snr_db` are the PTQ model's numeric health from a
     probed pass (repro.obs.numerics): worst per-site saturation rate
     and worst per-layer q7-vs-f32 SNR — the quality axis of the same
-    search."""
+    search.  `flash_bytes` / `ram_bytes` are the machine-readable
+    footprint of the lowered program (repro.edge.arena memory_report),
+    and `source` tags where the row came from — "ptq"/"qat" for the
+    Table-2 harness, "search" for Pareto-frontier rows — so bench docs
+    can tell baseline and searched rows apart."""
     name: str
     rounding: str
     acc_f32: float
@@ -74,6 +78,9 @@ class Table2Row:
     est_ms_gap8: float = float("nan")
     sat_pct: float = float("nan")
     snr_db: float = float("nan")
+    flash_bytes: int = 0
+    ram_bytes: int = 0
+    source: str = "ptq"
 
     @property
     def delta_ptq(self) -> float:
@@ -136,7 +143,9 @@ def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
         # price it on both calibrated profiles (QAT shares the exact
         # geometry, so one estimate covers the row)
         from repro.edge import lower, total_latency_ms
+        from repro.edge.arena import memory_report
         program = lower(q_ptq)
+        mem = memory_report(program)
         # the numeric-health axis: one probed VM pass of the PTQ model
         # with the trained float weights as the SNR oracle
         from repro.obs.numerics import run_numerics
@@ -151,24 +160,30 @@ def table2_rows(cfg: CapsNetConfig, tcfg: TrainConfig, *,
             est_ms_m7=total_latency_ms(program, "cortex-m7"),
             est_ms_gap8=total_latency_ms(program, "gap8"),
             sat_pct=100.0 * health.worst_saturation_rate(),
-            snr_db=health.min_snr_db()))
+            snr_db=health.min_snr_db(),
+            flash_bytes=int(mem["flash_bytes"]),
+            ram_bytes=int(mem["ram_bytes"])))
     return rows
 
 
 def format_rows(rows) -> str:
     """The Table-2 analogue printout (paper band: 0.07-0.18 % loss,
     74.99 % memory saving)."""
-    head = (f"  {'config':<18}{'variant':<16}{'rounding':<10}{'fp32':>8}"
+    head = (f"  {'config':<18}{'variant':<16}{'rounding':<10}{'src':<7}"
+            f"{'fp32':>8}"
             f"{'ptq':>8}{'qat':>8}{'d_ptq':>8}{'d_qat':>8}{'saving':>9}"
-            f"{'m7_ms':>9}{'gap8_ms':>9}{'sat%':>7}{'snr_db':>8}")
+            f"{'m7_ms':>9}{'gap8_ms':>9}{'sat%':>7}{'snr_db':>8}"
+            f"{'flash':>9}{'ram':>8}")
     lines = [head]
     for r in rows:
         lines.append(
-            f"  {r.name:<18}{r.variant:<16}{r.rounding:<10}{r.acc_f32:8.4f}"
+            f"  {r.name:<18}{r.variant:<16}{r.rounding:<10}{r.source:<7}"
+            f"{r.acc_f32:8.4f}"
             f"{r.acc_ptq:8.4f}{r.acc_qat:8.4f}{r.delta_ptq:8.4f}"
             f"{r.delta_qat:8.4f}{r.saving_pct:8.2f}%"
             f"{r.est_ms_m7:9.2f}{r.est_ms_gap8:9.2f}"
-            f"{r.sat_pct:7.2f}{r.snr_db:8.1f}")
+            f"{r.sat_pct:7.2f}{r.snr_db:8.1f}"
+            f"{r.flash_bytes:>9,}{r.ram_bytes:>8,}")
     lines.append("  paper Table 2: accuracy loss 0.07-0.18 %, "
                  "saving 74.99 % (latency est: repro.edge.costmodel; "
                  "sat/snr: repro.obs.numerics)")

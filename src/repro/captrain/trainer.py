@@ -31,6 +31,7 @@ import pathlib
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import ckpt, obs
 from repro.captrain.decoder import ReconDecoder
@@ -68,10 +69,18 @@ class TrainConfig:
 
 class CapsTrainer:
     def __init__(self, cfg: CapsNetConfig, tcfg: TrainConfig = TrainConfig(),
-                 mesh=None, metrics=None):
+                 mesh=None, metrics=None, rng=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
+        # optional EXPLICIT calibration rng (np.random.Generator).  When
+        # set, every calibration (QAT recalibrations and the final
+        # quantize) subsamples its calib_n images from a 4x pool through
+        # THIS generator — so a caller that seeds it owns the complete
+        # random state and repeated runs are bit-reproducible (the
+        # repro.search contract).  None (default) keeps the legacy fixed
+        # calibration set exactly.
+        self.rng = rng
         # the run's metrics registry: QAT clipping-rate series land here
         # (pass the serving/run registry to fold them into its snapshot)
         self.metrics = metrics if metrics is not None \
@@ -136,10 +145,16 @@ class CapsTrainer:
     # ------------------------------------------------------------------
     def calib_images(self):
         """Fixed calibration set, disjoint from the train stream (its own
-        seed) — QAT plans and the final PTQ see the same references."""
-        imgs, _ = ImageTask(self.tcfg.dataset,
-                            seed=self.tcfg.calib_seed).batch(
-            0, self.tcfg.calib_n)
+        seed) — QAT plans and the final PTQ see the same references.
+        With an explicit trainer rng, each call draws calib_n images
+        from a 4x pool through it instead (deterministic given the
+        caller's seed; order-stable via sorted indices)."""
+        tc = self.tcfg
+        n = tc.calib_n if self.rng is None else 4 * tc.calib_n
+        imgs, _ = ImageTask(tc.dataset, seed=tc.calib_seed).batch(0, n)
+        if self.rng is not None:
+            idx = self.rng.choice(n, size=tc.calib_n, replace=False)
+            imgs = np.asarray(imgs)[np.sort(idx)]
         return jnp.asarray(imgs)
 
     def derive_plan(self, state) -> PipelinePlan:

@@ -19,6 +19,11 @@ traffic of the CMSIS-NN/PULP-NN kernels they were fit on):
       as it is <1% of the MAC count for every shipped geometry)
 
   CAPS_ROUTING_Q7:  cycles = (macs + elems) * routing_cycles_per_op
+
+Non-default plans (approximate softmax/squash variants, per-channel
+conv / per-out routing requant tables) add a signed "overhead_ops"
+count on top — zero for default plans, so the calibration pin is
+untouched, negative for the cheaper ISLPED'22 approximate operators.
       macs  = u_hat (J*I*O*D) + per-iteration coupling (r * J*I*O)
               + agreement ((r-1) * J*I*O)
       elems = softmax (r * J*I) + squash (r * J*O)
@@ -96,6 +101,20 @@ def get_profile(profile) -> McuProfile:
 # ---------------------------------------------------------------------------
 # workload counts (pure geometry; no weights, no execution)
 # ---------------------------------------------------------------------------
+# Variant/table surcharges, expressed as EXTRA element operations on top
+# of the default-plan counts ("overhead_ops"), so default programs keep
+# bit-identical estimates to the calibrated model (the test pin).  The
+# factors are relative elementwise costs vs the default operator: the
+# ISLPED'22 approximate softmax/squash do strictly less work per element
+# (factor < 1 -> negative overhead), the float "precise" softmax does
+# far more.  Per-channel/per-out requant tables add one table lookup +
+# variable shift per output element.
+SOFTMAX_ELEM_FACTOR = {"q7": 1.0, "precise": 8.0, "approx": 0.5}
+SQUASH_ELEM_FACTOR = {"exact": 1.0, "approx": 0.5}
+PER_CHANNEL_CONV_ELEM_FACTOR = 4.0   # extra elem-ops per output element
+PER_OUT_ROUTING_ELEM_FACTOR = 1.0    # extra elem-ops per u_hat element
+
+
 def conv_out_hw(in_h: int, in_w: int, kernel: int, stride: int) -> tuple:
     return ((in_h - kernel) // stride + 1,
             (in_w - kernel) // stride + 1)
@@ -113,8 +132,13 @@ def op_counts(program: EdgeProgram, op: EdgeOp) -> dict:
                              a["kernel"], a["stride"])
         macs = oh * ow * a["out_ch"] * a["kernel"] ** 2 * a["in_ch"]
         elems = oh * ow * a["out_ch"]            # bias+requant(+relu)
+        overhead = 0.0
+        if a.get("out_shift_per_channel"):       # per-channel requant table
+            overhead += elems * PER_CHANNEL_CONV_ELEM_FACTOR
         if op.kind == "PRIMARY_CAPS_Q7":
             elems += out_size                    # squash over the capsules
+            sq = SQUASH_ELEM_FACTOR.get(a.get("squash_impl", "exact"), 1.0)
+            overhead += out_size * (sq - 1.0)
     elif op.kind == "CAPS_ROUTING_Q7":
         j, i, o, d = a["num_out"], a["num_in"], a["out_dim"], a["in_dim"]
         r = a["routings"]
@@ -122,11 +146,18 @@ def op_counts(program: EdgeProgram, op: EdgeOp) -> dict:
                 + r * j * i * o                  # coupling s = c . u_hat
                 + (r - 1) * j * i * o)           # agreement u_hat . v
         elems = r * j * i + r * j * o            # softmax + squash
+        sm = SOFTMAX_ELEM_FACTOR.get(a.get("softmax_impl", "q7"), 1.0)
+        sq = SQUASH_ELEM_FACTOR.get(a.get("squash_impl", "exact"), 1.0)
+        overhead = (r * j * i * (sm - 1.0)       # softmax variant delta
+                    + r * j * o * (sq - 1.0))    # squash variant delta
+        if a.get("uhat_shift_per_out"):          # per-out requant table
+            overhead += j * i * o * PER_OUT_ROUTING_ELEM_FACTOR
     else:
         raise ValueError(f"no cost model for op kind {op.kind!r}")
     return {
         "macs": int(macs),
         "elems": int(elems),
+        "overhead_ops": float(overhead),
         "load_bytes": int(op.weight_bytes
                           + program.tensor(op.inputs[0]).nbytes),
         "store_bytes": int(out_size),
@@ -134,10 +165,11 @@ def op_counts(program: EdgeProgram, op: EdgeOp) -> dict:
 
 
 def op_cycles(counts: dict, kind: str, profile: McuProfile) -> float:
+    overhead = counts.get("overhead_ops", 0.0)
     if kind in ("CONV_Q7", "PRIMARY_CAPS_Q7"):
-        return counts["macs"] * profile.conv_cycles_per_mac
+        return (counts["macs"] + overhead) * profile.conv_cycles_per_mac
     if kind == "CAPS_ROUTING_Q7":
-        return ((counts["macs"] + counts["elems"])
+        return ((counts["macs"] + counts["elems"] + overhead)
                 * profile.routing_cycles_per_op)
     raise ValueError(f"no cost model for op kind {kind!r}")
 

@@ -64,6 +64,18 @@ void {sym}(const q7_t *u, const q7_t *W,
     const int8_t *caps_out_fracs, const int8_t *agree_shifts,
     uint16_t squash_out_frac, q7_t *v_out, q7_t *bufferA);"""
 
+# per-output-capsule W formats (RoutingPlan.per_out): the u_hat
+# requantization shift becomes a length-num_out table, one entry per
+# output capsule (the routing analogue of the per-channel conv)
+_ROUTING_PER_OUT_PROTO = """\
+void {sym}(const q7_t *u, const q7_t *W,
+    uint16_t num_out, uint16_t num_in, uint16_t out_dim,
+    uint16_t in_dim, uint16_t routings,
+    const int8_t *uhat_shift_per_out,
+    uint16_t logit_frac, const int8_t *caps_out_shifts,
+    const int8_t *caps_out_fracs, const int8_t *agree_shifts,
+    uint16_t squash_out_frac, q7_t *v_out, q7_t *bufferA);"""
+
 
 def _variant(kind: str, attrs: dict):
     return _VARIANTS.from_attrs(kind, attrs)
@@ -76,10 +88,14 @@ def _squash_symbol(attrs: dict) -> str:
 def _routing_symbol(attrs: dict) -> str:
     """The routing kernel symbol, suffixed per non-default operator
     variant (the ISLPED'22 approximate kernels are distinct entry
-    points, so the artifact documents exactly which arithmetic ran)."""
-    return ("capsnet_dynamic_routing_q7"
-            + _variant("softmax", attrs).c_suffix
-            + _variant("squash", attrs).c_suffix)
+    points, so the artifact documents exactly which arithmetic ran) and
+    per-out when the plan carries per-output-capsule W formats."""
+    sym = ("capsnet_dynamic_routing_q7"
+           + _variant("softmax", attrs).c_suffix
+           + _variant("squash", attrs).c_suffix)
+    if attrs.get("uhat_shift_per_out"):
+        sym += "_per_out"
+    return sym
 
 
 def _variant_prototypes(program: EdgeProgram) -> list:
@@ -94,7 +110,9 @@ def _variant_prototypes(program: EdgeProgram) -> list:
         elif op.kind == "CAPS_ROUTING_Q7":
             sym = _routing_symbol(op.attrs)
             if sym != "capsnet_dynamic_routing_q7":
-                protos.append(_ROUTING_PROTO.format(sym=sym))
+                proto = _ROUTING_PER_OUT_PROTO \
+                    if op.attrs.get("uhat_shift_per_out") else _ROUTING_PROTO
+                protos.append(proto.format(sym=sym))
     if not protos:
         return []
     seen, out = set(), ["/* ISLPED'22 approximate-operator variants "
@@ -173,11 +191,13 @@ def _emit_op(op: EdgeOp, prog: EdgeProgram, plan: ArenaPlan) -> list:
             f"    {_squash_symbol(a)}({dst}, {n_caps}, {dim}, "
             f"{p.upper()}_SQUASH_IN_FRAC, {p.upper()}_SQUASH_OUT_FRAC);")
     elif op.kind == "CAPS_ROUTING_Q7":
+        uhat_arg = f"{p}_uhat_shift_per_out" \
+            if a.get("uhat_shift_per_out") else f"{p.upper()}_UHAT_SHIFT"
         lines += [
             f"    {_routing_symbol(a)}({src}, {p}_W, {a['num_out']},",
             f"        {a['num_in']}, {a['out_dim']}, {a['in_dim']}, "
             f"{a['routings']},",
-            f"        {p.upper()}_UHAT_SHIFT, {p.upper()}_LOGIT_FRAC, "
+            f"        {uhat_arg}, {p.upper()}_LOGIT_FRAC, "
             f"{p}_caps_out_shifts,",
             f"        {p}_caps_out_fracs, {p}_agree_shifts, "
             f"{p.upper()}_SQUASH_OUT_FRAC,",
@@ -241,7 +261,8 @@ def emit_c(program: EdgeProgram, plan: ArenaPlan | None = None) -> dict:
                          f"[{len(a[key])}];")
                 c.append(_shift_table(p, short, a[key]))
                 c.append("")
-        for key in ("caps_out_shifts", "caps_out_fracs", "agree_shifts"):
+        for key in ("caps_out_shifts", "caps_out_fracs", "agree_shifts",
+                    "W_frac_per_out", "uhat_shift_per_out"):
             if key in a:
                 h.append(f"extern const int8_t {p}_{key}[{len(a[key])}];")
                 c.append(_shift_table(p, key, a[key]))

@@ -112,7 +112,10 @@ def to_qnet(program: EdgeProgram, *, check: bool = True) -> QuantCapsNet:
                 softmax_impl=_impl(a, "softmax"), in_frac=a["in_frac"],
                 W_frac=a["W_frac"], uhat_frac=a["uhat_frac"],
                 squash_out_frac=a["squash_out_frac"],
-                squash_impl=_impl(a, "squash"))
+                squash_impl=_impl(a, "squash"),
+                W_frac_per_out=tuple(a.get("W_frac_per_out", ())),
+                uhat_shift_per_out=tuple(
+                    a.get("uhat_shift_per_out", ())))
         qweights[layer.name] = {k: jnp.asarray(w)
                                 for k, w in op.weights.items()}
 

@@ -93,6 +93,10 @@ def lower(qnet: QuantCapsNet, name: str | None = None) -> EdgeProgram:
                 "squash_out_frac": plan.squash_out_frac,
                 "squash_impl": plan.squash_impl,
             }
+            if plan.per_out:
+                attrs["W_frac_per_out"] = tuple(plan.W_frac_per_out)
+                attrs["uhat_shift_per_out"] = \
+                    tuple(plan.uhat_shift_per_out)
             out = new_tensor(f"{layer.name}.v",
                              (layer.num_out, layer.out_dim),
                              plan.out_frac)

@@ -144,10 +144,19 @@ def _run_routing(op: EdgeOp, u, rounding: str):
     W = op.weights["W"].astype(np.int32)
     acc = np.einsum("jiod,bid->bjio", W, u.astype(np.int32),
                     dtype=np.int32)
-    if _health._PROBE is not None:
-        _health._PROBE.observe_requant(acc, a["uhat_shift"], rounding,
-                                       site="uhat")
-    u_hat = _rshift_sat8(acc, a["uhat_shift"], rounding)
+    if a.get("uhat_shift_per_out"):
+        # per-output-capsule W formats (RoutingPlan.per_out): acc is
+        # [B,J,I,O], so the length-J table must broadcast on axis 1
+        sh = np.asarray(a["uhat_shift_per_out"], np.int32)[None, :, None,
+                                                           None]
+        if _health._PROBE is not None:
+            _health._PROBE.observe_requant(acc, sh, rounding, site="uhat")
+        u_hat = _rshift_sat8_vec(acc, sh, rounding)
+    else:
+        if _health._PROBE is not None:
+            _health._PROBE.observe_requant(acc, a["uhat_shift"], rounding,
+                                           site="uhat")
+        u_hat = _rshift_sat8(acc, a["uhat_shift"], rounding)
 
     out_frac = a["squash_out_frac"]
     softmax = _np_variant("softmax", a)

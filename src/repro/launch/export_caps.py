@@ -85,7 +85,20 @@ def main(argv=None) -> int:
                     "--numerics")
     ap.add_argument("--numerics-n", type=int, default=8,
                     help="images for the --numerics probe batch")
+    ap.add_argument("--from-search", metavar="RESULT.json", default=None,
+                    help="export a frontier point from a repro.search/v1 "
+                    "result doc (repro.launch.search_caps --out): replays "
+                    "the doc's seeded setup, rebuilds the point's model, "
+                    "asserts its plan matches the doc bit-for-bit, "
+                    "re-runs the static checker, then exports.  Ignores "
+                    "--model/--rounding/--per-channel/--softmax/--squash "
+                    "(the doc's config governs)")
+    ap.add_argument("--point", type=int, default=0,
+                    help="frontier point index for --from-search")
     args = ap.parse_args(argv)
+
+    if args.from_search:
+        return _export_from_search(args)
 
     model_id = args.model if "@" in args.model else f"{args.model}@jnp"
     registry = ModelRegistry()
@@ -163,6 +176,47 @@ def main(argv=None) -> int:
             for f in findings:
                 print(f"[export_caps] NUMERICS: {f}", file=sys.stderr)
             return 1
+    return 0
+
+
+def _export_from_search(args) -> int:
+    """The --from-search path: result doc + point index -> artifact."""
+    from repro.analysis import check_program
+    from repro.edge import lower
+    from repro.edge.export import export_artifacts
+    from repro.search import load_doc, rebuild_point
+
+    try:
+        doc = load_doc(args.from_search)
+        qnet, entry, st = rebuild_point(doc, args.point)
+    except (OSError, ValueError, RuntimeError) as e:
+        print(f"[export_caps] --from-search: {e}", file=sys.stderr)
+        return 2
+    print(f"[export_caps] search point {args.point} of "
+          f"{args.from_search}: spec={entry['spec']} "
+          f"acc={entry['metrics'].get('acc'):.4f} -> {args.out}")
+
+    # the satellite contract: re-run the static verifier on the rebuilt
+    # program BEFORE anything is written, even though export_artifacts
+    # would check again — a drifted checker must block the export here
+    result = check_program(lower(qnet))
+    if not result.ok:
+        print(f"[export_caps] STATIC CHECK FAILED:\n{result.format()}",
+              file=sys.stderr)
+        return 1
+    stem = args.stem or f"{doc['config']['model']}_p{args.point}"
+    verify = st.images[:args.verify_n] if args.verify_n > 0 else None
+    try:
+        out = export_artifacts(qnet, args.out, stem=stem,
+                               verify_images=verify, check=args.check)
+    except CheckError as e:
+        print(f"[export_caps] STATIC CHECK FAILED:\n{e}", file=sys.stderr)
+        return 1
+    except AssertionError as e:
+        print(f"[export_caps] VERIFY FAILED: {e}", file=sys.stderr)
+        return 1
+    print(describe(out["program"]))
+    print(format_export(out))
     return 0
 
 

@@ -59,9 +59,14 @@ class JnpBackend:
 
     def uhat_q7(self, W, u, *, shift, rounding):
         """calc_inputs_hat: W int8 [J,I,O,D] x u int8 [B,I,D] -> int8
-        u_hat [B,J,I,O] (int32 accumulation, one shift)."""
+        u_hat [B,J,I,O] (int32 accumulation, one shift).  `shift` is
+        either a scalar (per-tensor W format) or a length-J sequence
+        (RoutingPlan.uhat_shift_per_out), applied per output capsule."""
         acc = jnp.einsum("jiod,bid->bjio", W.astype(jnp.int32),
                          u.astype(jnp.int32))
+        if isinstance(shift, (tuple, list)):
+            shifts = jnp.asarray(shift, jnp.int32)[None, :, None, None]
+            return q.rshift_sat8_vec(acc, shifts, rounding)
         return q.rshift_sat8(acc, shift, rounding)
 
     def routing_q7(self, u_hat, plan, *, rounding):

@@ -232,6 +232,7 @@ class CapsuleRouting:
     routings: int = 3
     softmax_impl: str = DEFAULT_SOFTMAX   # variant defaults carried into
     squash_impl: str = DEFAULT_SQUASH     # the plan (registry-validated)
+    per_channel: bool = False       # per-output-capsule W formats
 
     def init(self, key) -> dict:
         return {"W": jax.random.normal(
@@ -274,6 +275,15 @@ class CapsuleRouting:
         f_logit = min(fb(max_logit), 7)
         f_s = tuple(fb(stats[f"{self.name}.s/{r}"])
                     for r in range(self.routings))
+        pc_W = pc_shift = ()
+        if self.per_channel:
+            # per-output-capsule formats from the same derivation the
+            # quantizer uses (axis 0 = the J output capsules), so plan
+            # and weights cannot disagree
+            _, ns = qf.quantize_per_channel(params["W"], axis=0)
+            pc_W = tuple(int(n) for n in ns)
+            pc_shift = tuple(qf.out_shift(in_frac, f, f_uhat)
+                             for f in pc_W)
         return RoutingPlan(
             uhat_shift=qf.out_shift(in_frac, f_W, f_uhat),
             logit_frac=f_logit,
@@ -283,15 +293,25 @@ class CapsuleRouting:
             agree_shifts=tuple(qf.out_shift(f_uhat, 7, f_logit)
                                for _ in range(self.routings - 1)),
             softmax_impl=self.softmax_impl, squash_impl=self.squash_impl,
-            in_frac=in_frac, W_frac=f_W, uhat_frac=f_uhat)
+            in_frac=in_frac, W_frac=f_W, uhat_frac=f_uhat,
+            W_frac_per_out=pc_W, uhat_shift_per_out=pc_shift)
 
     def quantize(self, params, plan: RoutingPlan) -> dict:
+        if plan.per_out:
+            # quantize with the PLAN's per-capsule formats (like the
+            # conv's per-channel path) so plan edits stay consistent
+            # with the shifts fwd_q7 will apply
+            return {"W": qf.quantize_with_fracs(params["W"],
+                                                plan.W_frac_per_out,
+                                                axis=0)}
         return {"W": qf.quantize(params["W"], plan.W_frac)}
 
     def fwd_q7(self, qweights, plan: RoutingPlan, u, *, backend="jnp",
                rounding="floor"):
         be = get_backend(backend)
-        u_hat = be.uhat_q7(qweights["W"], u, shift=plan.uhat_shift,
+        shift = plan.uhat_shift_per_out if plan.per_out \
+            else plan.uhat_shift
+        u_hat = be.uhat_q7(qweights["W"], u, shift=shift,
                            rounding=rounding)
         return be.routing_q7(u_hat, plan, rounding=rounding)
 
@@ -310,7 +330,11 @@ class CapsuleRouting:
         (couplings and squash via the plan's variant references, like
         the backends; the logit clamp models add_q7's int8 saturation)."""
         sq = REGISTRY.get("squash", plan.squash_impl)
-        W = qf.fake_quant(params["W"], plan.W_frac)
+        if plan.per_out:
+            W = qf.fake_quant_with_fracs(params["W"],
+                                         plan.W_frac_per_out, axis=0)
+        else:
+            W = qf.fake_quant(params["W"], plan.W_frac)
         u_hat = qf.fake_quant(jnp.einsum("jiod,bid->bjio", W, u),
                               plan.uhat_frac, rounding)
         b = jnp.zeros(u_hat.shape[:3], jnp.float32)

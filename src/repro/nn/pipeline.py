@@ -37,13 +37,17 @@ class CapsPipeline:
     def from_config(cls, cfg: CapsNetConfig, softmax_impl: str | None = None,
                     per_channel: bool = False,
                     squash_impl: str | None = None,
-                    variants: VariantSet | None = None) -> "CapsPipeline":
+                    variants: VariantSet | None = None,
+                    per_channel_w: bool = False) -> "CapsPipeline":
         """Build the typed pipeline for a geometry config.
 
         Operator variants come from the registry (repro.nn.variants):
         pass a whole `variants=VariantSet(...)`, or the individual
         `softmax_impl=` / `squash_impl=` names (unknown names raise with
-        the registered ones listed).  Omitted -> registry defaults."""
+        the registered ones listed).  Omitted -> registry defaults.
+        `per_channel` opts the convs into per-output-channel weight
+        formats; `per_channel_w` does the same for the routing W
+        (per-output-capsule formats, RoutingPlan.W_frac_per_out)."""
         if variants is None:
             variants = VariantSet(
                 **{k: v for k, v in (("softmax", softmax_impl),
@@ -67,7 +71,7 @@ class CapsPipeline:
         layers.append(CapsuleRouting(
             "caps", cfg.num_classes, cfg.num_input_caps, cfg.caps_dim,
             cfg.pcap_dim, cfg.routings, softmax_impl=variants.softmax,
-            squash_impl=variants.squash))
+            squash_impl=variants.squash, per_channel=per_channel_w))
         return cls(cfg=cfg, layers=tuple(layers))
 
     def layer(self, name: str):

@@ -96,10 +96,20 @@ class RoutingPlan:
     uhat_frac: int = 0
     squash_out_frac: int = 7        # Q0.7 default; a plan edit, like softmax
     squash_impl: str = _variants.DEFAULT_SQUASH     # registry reference
+    # per-output-capsule weight formats (opt-in, the routing analogue of
+    # ConvPlan's per-channel tables): entry j is the Qm.n format of
+    # W[j, ...] and the matching u_hat requantization shift.  Empty
+    # tuples mean per-tensor (the paper's scheme).
+    W_frac_per_out: tuple = ()
+    uhat_shift_per_out: tuple = ()
 
     def __post_init__(self):
         _variants.REGISTRY.validate("softmax", self.softmax_impl)
         _variants.REGISTRY.validate("squash", self.squash_impl)
+
+    @property
+    def per_out(self) -> bool:
+        return bool(self.W_frac_per_out)
 
     @property
     def routings(self) -> int:

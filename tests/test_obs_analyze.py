@@ -275,8 +275,8 @@ def test_committed_baselines_self_compare_clean():
     base_dir = REPO / "benchmarks" / "baselines"
     assert sorted(p.name for p in base_dir.glob("BENCH_*.json")) == [
         "BENCH_edge_vm.json", "BENCH_numerics.json",
-        "BENCH_observability.json", "BENCH_serving.json",
-        "BENCH_variants.json"]
+        "BENCH_observability.json", "BENCH_search.json",
+        "BENCH_serving.json", "BENCH_variants.json"]
     findings, notes = baseline.compare_dirs(base_dir, base_dir)
     assert findings == [] and notes == []
 

@@ -1,0 +1,343 @@
+"""Tests for repro.search — the quantization/variant Pareto search.
+
+Pinned guarantees:
+  * CandidateSpec round-trips JSON, canonicalizes deltas, and rejects
+    out-of-range reductions and unknown variant names;
+  * SearchSpace's delta algebra produces plans that pass the full
+    plancheck shift algebra by construction, with every dependent
+    shift (out/bias/per-channel/per-out) recomputed;
+  * the per-out routing W chain: spec -> qnet -> EdgeVM bits match the
+    jnp oracle, survive the `.capsbin` round-trip, and a corrupted
+    per-out shift table is a plancheck finding;
+  * costmodel overhead surcharges are exact (per-channel conv, per-out
+    routing, approximate variants) and zero for default plans;
+  * `CapsTrainer(rng=...)` calibration subsampling is reproducible per
+    seed, and `rng=None` keeps the legacy fixed calibration set;
+  * identical SearchConfig seeds reproduce byte-identical
+    `repro.search/v1` docs, for both strategies;
+  * acceptance (tiny budget on edge_tiny): >= 3 frontier points, every
+    one export/check/bit-verified with zero checker findings, mutually
+    non-dominated, and at least one point strictly dominating the
+    default q7 plan on packed memory or estimated latency within 0.5 %
+    accuracy;
+  * frontier points rebuild deterministically (`rebuild_point`) and
+    export through `export_caps --from-search`.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.captrain.trainer import CapsTrainer, TrainConfig
+from repro.data.synthetic import ImageTask
+from repro.edge import EdgeVM, lower, total_latency_ms
+from repro.edge.costmodel import (MCU_PROFILES,
+                                  PER_CHANNEL_CONV_ELEM_FACTOR,
+                                  PER_OUT_ROUTING_ELEM_FACTOR,
+                                  SOFTMAX_ELEM_FACTOR,
+                                  SQUASH_ELEM_FACTOR, op_counts)
+from repro.launch import export_caps, search_caps
+from repro.nn.pipeline import CapsPipeline
+from repro.search import (SearchConfig, CandidateSpec, SearchSpace,
+                          dominated_pairs, dominates, frontier_table_rows,
+                          pareto, rebuild_point, run_search, save_doc)
+from repro.search.objective import Candidate
+from repro.serving.registry import EDGE_TINY
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_space():
+    """An untrained edge_tiny SearchSpace (plan algebra and lowering do
+    not need trained weights)."""
+    pipe = CapsPipeline.from_config(EDGE_TINY)
+    params = pipe.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    calib = rng.uniform(0, 1, (16, 16, 16, 1)).astype(np.float32)
+    return SearchSpace(EDGE_TINY, params, calib)
+
+
+@pytest.fixture(scope="module")
+def search_doc():
+    """One real (tiny) coordinate search run on edge_tiny."""
+    cfg = SearchConfig(model="edge_tiny", strategy="coordinate",
+                       budget=8, float_steps=8, eval_n=64,
+                       verify_n=2, seed=0)
+    return cfg, run_search(cfg)
+
+
+# ---------------------------------------------------------------------------
+# CandidateSpec
+# ---------------------------------------------------------------------------
+def test_spec_roundtrip_canonical_and_validation():
+    s = CandidateSpec(softmax="approx",
+                      w_frac_deltas=(("pcap", -2), ("conv0", -1)),
+                      out_frac_deltas=(("conv0", -1),))
+    assert s.w_frac_deltas == (("conv0", -1), ("pcap", -2))  # sorted
+    assert CandidateSpec.from_json(
+        json.loads(json.dumps(s.to_json()))) == s
+    assert s.with_delta("w_frac_deltas", "pcap", 0).w_frac_deltas == \
+        (("conv0", -1),)                                     # 0 removes
+    # the default variant canonicalizes to "" (one spec per model)
+    assert CandidateSpec().with_variant("softmax", "q7") == CandidateSpec()
+    with pytest.raises(ValueError):
+        CandidateSpec(w_frac_deltas=(("conv0", -4),))        # too deep
+    with pytest.raises(ValueError):
+        CandidateSpec(w_frac_deltas=(("conv0", 1),))         # refinement
+    with pytest.raises(ValueError):
+        CandidateSpec(softmax="nope")
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace delta algebra
+# ---------------------------------------------------------------------------
+def test_build_plan_recomputes_all_shifts(tiny_space):
+    spec = CandidateSpec(per_channel=True, per_channel_w=True,
+                         w_frac_deltas=(("conv0", -2), ("caps", -1)),
+                         out_frac_deltas=(("conv0", -1),))
+    base = tiny_space.build_plan(CandidateSpec(per_channel=True,
+                                               per_channel_w=True))
+    plan = tiny_space.build_plan(spec)
+    assert plan.check() == []
+    c0, b0 = plan["conv0"], base["conv0"]
+    assert c0.w_frac == b0.w_frac - 2
+    assert c0.out_frac == b0.out_frac - 1
+    assert c0.out_shift == c0.in_frac + c0.w_frac - c0.out_frac
+    assert c0.w_frac_per_channel == tuple(f - 2
+                                          for f in b0.w_frac_per_channel)
+    caps, bcaps = plan["caps"], base["caps"]
+    assert caps.W_frac == bcaps.W_frac - 1
+    assert caps.W_frac_per_out == tuple(f - 1
+                                        for f in bcaps.W_frac_per_out)
+    assert caps.uhat_shift_per_out == tuple(
+        caps.in_frac + f - caps.uhat_frac for f in caps.W_frac_per_out)
+    # chaining: conv0's new out_frac is pcap's in_frac
+    assert plan["pcap"].conv.in_frac == c0.out_frac
+
+
+def test_axes_deterministic(tiny_space):
+    axes = tiny_space.axes()
+    assert axes == tiny_space.axes()
+    assert ("w_frac", "caps") in axes
+    assert ("out_frac", "caps") not in axes       # routing out is squash
+    assert axes[-2:] == [("flag", "per_channel"), ("flag", "per_channel_w")]
+
+
+# ---------------------------------------------------------------------------
+# per-out routing W chain (spec -> oracle == VM -> capsbin -> plancheck)
+# ---------------------------------------------------------------------------
+def test_per_out_routing_bits_and_roundtrip(tiny_space, tmp_path):
+    qnet = tiny_space.build_qnet(CandidateSpec(per_channel_w=True))
+    assert qnet.plan["caps"].per_out
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, (4, 16, 16, 1)).astype(np.float32)
+    x_q = np.asarray(qnet.quantize_input(x))
+    program = lower(qnet)
+    assert program.ops[-1].attrs["uhat_shift_per_out"] == \
+        tuple(qnet.plan["caps"].uhat_shift_per_out)
+    np.testing.assert_array_equal(EdgeVM(program).run(x_q),
+                                  np.asarray(qnet.forward(x_q)))
+    paths = program.save(tmp_path / "per_out")
+    from repro.edge.program import EdgeProgram
+    reloaded = EdgeProgram.load(paths["capsbin"])
+    assert program.same_as(reloaded)
+    np.testing.assert_array_equal(EdgeVM(reloaded).run(x_q),
+                                  np.asarray(qnet.forward(x_q)))
+
+
+def test_per_out_corruption_is_plancheck_finding(tiny_space):
+    plan = tiny_space.build_plan(CandidateSpec(per_channel_w=True))
+    caps = plan["caps"]
+    bad = dataclasses.replace(caps, uhat_shift_per_out=tuple(
+        s + 1 for s in caps.uhat_shift_per_out))
+    findings = dataclasses.replace(
+        plan, layers={**plan.layers, "caps": bad}).check()
+    assert any("uhat-shift" in f.check for f in findings)
+    short = dataclasses.replace(caps,
+                                W_frac_per_out=caps.W_frac_per_out[:-1])
+    findings = dataclasses.replace(
+        plan, layers={**plan.layers, "caps": short}).check()
+    assert any("per-out-length" in f.check for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# costmodel on per-channel / non-default-variant programs (satellite)
+# ---------------------------------------------------------------------------
+def test_costmodel_overhead_exact(tiny_space):
+    base = lower(tiny_space.build_qnet(CandidateSpec()))
+    for op in base.ops:
+        assert op_counts(base, op)["overhead_ops"] == 0.0
+    base_ms = total_latency_ms(base, "cortex-m7")
+
+    pc = lower(tiny_space.build_qnet(CandidateSpec(per_channel=True)))
+    saw_per_channel = 0
+    for op in pc.ops:
+        c = op_counts(pc, op)
+        if not op.attrs.get("out_shift_per_channel"):
+            continue
+        saw_per_channel += 1
+        requant_elems = (c["elems"] if op.kind == "CONV_Q7"
+                         else c["elems"] - pc.tensor(op.output).size)
+        # default squash -> the per-channel table is the only surcharge
+        assert c["overhead_ops"] == \
+            requant_elems * PER_CHANNEL_CONV_ELEM_FACTOR
+    assert saw_per_channel >= 2                  # conv0 and pcap
+    assert total_latency_ms(pc, "cortex-m7") > base_ms
+
+    po = lower(tiny_space.build_qnet(CandidateSpec(per_channel_w=True)))
+    rop = po.ops[-1]
+    a = rop.attrs
+    c = op_counts(po, rop)
+    assert c["overhead_ops"] == (a["num_out"] * a["num_in"] * a["out_dim"]
+                                 * PER_OUT_ROUTING_ELEM_FACTOR)
+    assert total_latency_ms(po, "cortex-m7") > base_ms
+
+    ap = lower(tiny_space.build_qnet(
+        CandidateSpec(softmax="approx", squash="approx")))
+    rop = ap.ops[-1]
+    c = op_counts(ap, rop)
+    a = rop.attrs
+    r, j, i, o = a["routings"], a["num_out"], a["num_in"], a["out_dim"]
+    assert c["overhead_ops"] == pytest.approx(
+        r * j * i * (SOFTMAX_ELEM_FACTOR["approx"] - 1.0)
+        + r * j * o * (SQUASH_ELEM_FACTOR["approx"] - 1.0))
+    assert total_latency_ms(ap, "cortex-m7") < base_ms
+    for profile in MCU_PROFILES:              # both parts rank the same way
+        assert total_latency_ms(ap, profile) < \
+            total_latency_ms(base, profile)
+
+
+# ---------------------------------------------------------------------------
+# trainer calibration rng (satellite)
+# ---------------------------------------------------------------------------
+def test_trainer_calib_rng_reproducible():
+    tcfg = TrainConfig(dataset="edge_tiny", calib_n=8)
+    a = CapsTrainer(EDGE_TINY, tcfg, rng=np.random.default_rng(7))
+    b = CapsTrainer(EDGE_TINY, tcfg, rng=np.random.default_rng(7))
+    first = np.asarray(a.calib_images())
+    np.testing.assert_array_equal(first, np.asarray(b.calib_images()))
+    # a second draw advances the generator (same on both replicas)
+    second = np.asarray(a.calib_images())
+    np.testing.assert_array_equal(second, np.asarray(b.calib_images()))
+    assert not np.array_equal(first, second)
+    # rng=None keeps the legacy fixed calibration set bit-exactly
+    legacy = CapsTrainer(EDGE_TINY, tcfg).calib_images()
+    imgs, _ = ImageTask("edge_tiny", seed=tcfg.calib_seed).batch(0, 8)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(imgs))
+
+
+# ---------------------------------------------------------------------------
+# frontier math (pure)
+# ---------------------------------------------------------------------------
+def _cand(acc, flash, ram=1, ms=1.0, ok=True):
+    return Candidate(CandidateSpec(), {"acc": acc,
+                                       "flash_packed_bytes": flash,
+                                       "ram_bytes": ram, "est_ms_m7": ms},
+                     ok)
+
+
+def test_pareto_and_dominance():
+    a = _cand(0.9, 100)
+    b = _cand(0.8, 100)              # dominated by a
+    c = _cand(0.8, 50)               # trades acc for flash
+    d = _cand(0.9, 100)              # duplicate of a -> deduped
+    e = _cand(0.99, 10, ok=False)    # rejected: never on the frontier
+    front = pareto([a, b, c, d, e])
+    assert [f.metrics["acc"] for f in front] == [0.9, 0.8]
+    assert dominates(a.metrics, b.metrics)
+    assert not dominates(b.metrics, c.metrics)
+    assert not dominates(a.metrics, a.metrics)   # no strict edge
+    assert dominated_pairs([f.to_json() for f in front]) == 0
+    assert dominated_pairs([a.to_json(), b.to_json()]) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: reproducibility, acceptance, rebuild, CLIs
+# ---------------------------------------------------------------------------
+def test_search_reproducible_per_seed(search_doc):
+    cfg, doc = search_doc
+    again = run_search(cfg)
+    assert json.dumps(doc, sort_keys=True) == \
+        json.dumps(again, sort_keys=True)
+
+
+def test_random_strategy_reproducible():
+    cfg = SearchConfig(model="edge_tiny", strategy="random", budget=5,
+                       float_steps=8, eval_n=64, calib_n=16,
+                       numerics_n=16, verify_n=2, seed=11)
+    d1, d2 = run_search(cfg), run_search(cfg)
+    assert json.dumps(d1, sort_keys=True) == json.dumps(d2, sort_keys=True)
+    assert len(d1["evaluated"]) >= 2
+
+
+def test_acceptance_frontier(search_doc):
+    _, doc = search_doc
+    front = doc["frontier"]
+    assert len(front) >= 3
+    for p in front:
+        assert p["verified"] and p["checked"]
+        assert p["metrics"]["checker_findings"] == 0
+        assert p["plan"] is not None
+    assert dominated_pairs(front) == 0
+    # >= 1 point strictly dominates the default plan on memory or
+    # estimated latency within the paper's 0.5 % accuracy band
+    base = doc["baseline"]["metrics"]
+    assert any(
+        p["metrics"]["acc"] >= base["acc"] - 0.005
+        and (p["metrics"]["flash_packed_bytes"] < base["flash_packed_bytes"]
+             or p["metrics"]["est_ms_m7"] < base["est_ms_m7"])
+        for p in front)
+
+
+def test_frontier_table_rows(search_doc):
+    from repro.captrain.evalq import format_rows
+    _, doc = search_doc
+    rows = frontier_table_rows(doc)
+    assert len(rows) == len(doc["frontier"])
+    for r in rows:
+        assert r.source == "search"
+        assert r.flash_bytes > 0 and r.ram_bytes > 0
+    assert "search" in format_rows(rows)
+
+
+def test_rebuild_point_matches_doc(search_doc):
+    _, doc = search_doc
+    point = doc["frontier"][0]["point"]
+    qnet, entry, _ = rebuild_point(doc, point)     # asserts plan equality
+    assert qnet.plan.check() == []
+    with pytest.raises(ValueError):
+        rebuild_point(doc, 10_000)
+
+
+def test_export_caps_from_search(search_doc, tmp_path):
+    _, doc = search_doc
+    doc_path = tmp_path / "search.json"
+    save_doc(doc, doc_path)
+    out = tmp_path / "export"
+    rc = export_caps.main(["--from-search", str(doc_path), "--point", "0",
+                           "--out", str(out), "--verify-n", "2"])
+    assert rc == 0
+    assert list(out.glob("*.capsbin"))
+    # a tampered plan in the doc must fail the rebuild drift guard
+    bad = json.loads(json.dumps(doc))
+    bad["frontier"][0]["plan"]["input_frac"] += 1
+    bad_path = tmp_path / "bad.json"
+    save_doc(bad, bad_path)
+    rc = export_caps.main(["--from-search", str(bad_path), "--point", "0",
+                           "--out", str(tmp_path / "bad_export")])
+    assert rc == 2
+
+
+def test_search_caps_cli(tmp_path):
+    out = tmp_path / "doc.json"
+    rc = search_caps.main(["--model", "edge_tiny", "--budget", "4",
+                           "--float-steps", "4", "--eval-n", "32",
+                           "--out", str(out), "--seed", "1"])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "repro.search/v1"
+    assert doc["frontier"]
